@@ -1,0 +1,45 @@
+"""Fig. 2 analogue: label-agreement probability vs embedding distance."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.data import make_dataset
+
+CASES = [("imdb_review", "RV-Q1"), ("imdb_review", "RV-Q2"),
+         ("imdb_review", "RV-Q3"), ("codebase", "CB-Q1"),
+         ("codebase", "CB-Q2"), ("tc", "TC")]
+
+
+def main(small: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    for ds_name, q in CASES[:3] if small else CASES:
+        ds = make_dataset(ds_name, n=3000 if small else 8000, seed=0)
+        lab = ds.labels[q]
+        n = len(lab)
+        i = rng.integers(0, n, 60000)
+        j = rng.integers(0, n, 60000)
+        d = np.linalg.norm(ds.embeddings[i] - ds.embeddings[j], axis=1)
+        agree = (lab[i] == lab[j]).astype(float)
+        bins = np.quantile(d, np.linspace(0, 1, 11))
+        means = []
+        for b in range(10):
+            m = (d >= bins[b]) & (d < bins[b + 1] + 1e-9)
+            means.append(float(agree[m].mean()) if m.any() else float("nan"))
+        slope = means[0] - means[-1]
+        emit(f"fig2/{q}", 0.0,
+             "agree_by_decile=" + "|".join(f"{v:.3f}" for v in means)
+             + f";near_minus_far={slope:.3f}")
+        rows.append((q, means, slope))
+        if q in ("RV-Q1", "CB-Q2", "TC"):  # primary (balanced) predicates
+            assert slope > 0, f"{q}: agreement must decay with distance"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

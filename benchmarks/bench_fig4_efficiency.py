@@ -1,0 +1,43 @@
+"""Fig. 4 analogue: # LLM calls, execution time, token usage per method."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit, run_method
+from repro.core import CSVConfig, SemanticTable
+from repro.data import make_dataset
+
+CASES = [("imdb_review", "RV-Q1", 20000), ("airdialogue", "AD-Q1", 20000),
+         ("codebase", "CB-Q2", 9378), ("tc", "TC", 12000),
+         ("fever", "Fever", 10000)]
+METHODS = ["reference", "lotus", "bargain", "csv", "csv-sim"]
+
+
+def main(small: bool = False):
+    rows = []
+    for ds_name, q, n in CASES[:2] if small else CASES:
+        if small:
+            n = min(n, 4000)
+        ds = make_dataset(ds_name, n=n, seed=0)
+        truth = ds.labels[q]
+        table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+        ref_calls = None
+        for m in METHODS:
+            out = run_method(table, truth, ds.token_lens, m,
+                             cfg=CSVConfig(n_clusters=4, xi=0.005))
+            if m == "reference":
+                ref_calls = out["oracle_calls"]
+            red = ref_calls / max(1, out["oracle_calls"])
+            us_per_call = out["wall_s"] / max(1, out["oracle_calls"]) * 1e6
+            emit(f"fig4/{ds_name}/{q}/{m}", us_per_call,
+                 f"oracle={out['oracle_calls']};proxy={out['proxy_calls']};"
+                 f"tokens={out['tokens']};redux_vs_ref={red:.1f}x;"
+                 f"acc={out['acc']:.4f};f1={out['f1']:.4f}")
+            rows.append((ds_name, q, m, out))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: wall time of the dispatch ops on this backend
+plus analytic arithmetic-intensity / roofline placement for the TPU target."""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.kernels.kmeans.ops import assign_clusters
+from repro.kernels.simvote.ops import simvote_scores
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.utils.timing import time_jax
+
+PEAK_FLOPS, HBM_BW = 197e12, 819e9
+
+
+def _roofline_note(flops, bytes_):
+    ai = flops / max(bytes_, 1)
+    knee = PEAK_FLOPS / HBM_BW  # ~240 flops/byte on v5e
+    bound = "compute" if ai > knee else "memory"
+    return f"arith_intensity={ai:.1f};v5e_bound={bound}"
+
+
+def main(small: bool = False):
+    n, d, k = (2000, 64, 8) if small else (20000, 256, 16)
+    x = jax.random.normal(jax.random.key(0), (n, d))
+    c = jax.random.normal(jax.random.key(1), (k, d))
+    t = time_jax(lambda: jax.block_until_ready(assign_clusters(x, c)))
+    fl, by = 2 * n * d * k, 4 * (n * d + k * d + n)
+    emit("kernels/kmeans_assign", t / n * 1e6, _roofline_note(fl, by))
+
+    m = 128
+    s = jax.random.normal(jax.random.key(2), (m, d))
+    y = (jax.random.uniform(jax.random.key(3), (m,)) > 0.5).astype(jnp.float32)
+    t = time_jax(lambda: jax.block_until_ready(simvote_scores(x, s, y, 1.0)))
+    fl, by = 2 * n * m * d, 4 * (n * d + m * d + 2 * n)
+    emit("kernels/simvote", t / n * 1e6, _roofline_note(fl, by))
+
+    B, H, KV, S, hd = (1, 4, 2, 512, 64) if small else (2, 8, 2, 2048, 128)
+    q = jax.random.normal(jax.random.key(4), (B, H, S, hd), jnp.float32)
+    kk = jax.random.normal(jax.random.key(5), (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(6), (B, KV, S, hd), jnp.float32)
+    t = time_jax(lambda: jax.block_until_ready(
+        flash_attention(q, kk, v, causal=True)))
+    fl = 2 * B * H * S * S * hd  # qk + pv
+    by = 2 * B * (H + 2 * KV) * S * hd
+    emit("kernels/flash_attention", t / (B * S) * 1e6, _roofline_note(fl, by))
+
+    L = 4096 if small else 32768
+    q1 = jax.random.normal(jax.random.key(7), (B, H, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.key(8), (B, KV, L, hd), jnp.float32)
+    vc = jax.random.normal(jax.random.key(9), (B, KV, L, hd), jnp.float32)
+    lens = jnp.full((B,), L, jnp.int32)
+    t = time_jax(lambda: jax.block_until_ready(
+        decode_attention(q1, kc, vc, lens)))
+    fl = 2 * B * H * L * hd * 2
+    by = 2 * B * 2 * KV * L * hd
+    emit("kernels/decode_attention", t / B * 1e6, _roofline_note(fl, by))
+
+
+if __name__ == "__main__":
+    main()

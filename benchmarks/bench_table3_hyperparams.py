@@ -1,0 +1,45 @@
+"""Table 3 + Fig. 5 analogue: #clusters, sample ratio xi, lower bound lb."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit, run_method
+from repro.core import CSVConfig, SemanticTable
+from repro.data import make_dataset
+
+
+def main(small: bool = False):
+    n = 4000 if small else 16000
+    ds = make_dataset("imdb_review", n=n, seed=0)
+    truth = ds.labels["RV-Q1"]
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    rows = []
+    for method in ["csv", "csv-sim"]:
+        for k in [2, 4, 8, 16]:
+            out = run_method(table, truth, ds.token_lens, method,
+                             cfg=CSVConfig(n_clusters=k))
+            emit(f"table3/{method}/clusters={k}", 0.0,
+                 f"acc={out['acc']:.4f};f1={out['f1']:.4f};"
+                 f"calls={out['oracle_calls']}")
+            rows.append(("clusters", k, method, out))
+        for xi in [0.005, 0.010, 0.015, 0.020, 0.025]:
+            out = run_method(table, truth, ds.token_lens, method,
+                             cfg=CSVConfig(n_clusters=4, xi=xi))
+            emit(f"table3/{method}/xi={xi*1000:.0f}permil", 0.0,
+                 f"acc={out['acc']:.4f};f1={out['f1']:.4f};"
+                 f"calls={out['oracle_calls']}")
+            rows.append(("xi", xi, method, out))
+        for lb in [0.10, 0.15, 0.20, 0.50]:
+            out = run_method(table, truth, ds.token_lens, method,
+                             cfg=CSVConfig(n_clusters=4, lb=lb))
+            emit(f"table3/{method}/lb={lb}", 0.0,
+                 f"acc={out['acc']:.4f};f1={out['f1']:.4f};"
+                 f"calls={out['oracle_calls']}")
+            rows.append(("lb", lb, method, out))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

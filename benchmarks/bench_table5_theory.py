@@ -1,0 +1,57 @@
+"""Table 5 analogue: theory-vs-practice gap on one representative cluster.
+
+For each error tolerance eps: compute the required xi from Theorems 3.3/3.6,
+sample at that ratio, and report Est. (fraction of committed votes agreeing
+with the LLM label) and Err. (|sample mean - population mean|)."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.core import theory
+from repro.core.oracle import SyntheticOracle
+from repro.data import make_dataset
+
+
+def main(small: bool = False):
+    n = 4000 if small else 14608  # paper's representative cluster size
+    ds = make_dataset("imdb_review", n=2 * n, seed=0)
+    # pick the largest pure topic as "the representative cluster"
+    from collections import Counter
+    top = Counter(ds.topics.tolist()).most_common(1)[0][0]
+    members = np.nonzero(ds.topics == top)[0][:n]
+    oracle = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.02, seed=7)
+    x = oracle(members).astype(float)  # LLM labels of the cluster
+    mu = x.mean()
+    conf = max(mu, 1 - mu)
+    sigma2 = mu * (1 - mu)
+    rng = np.random.default_rng(0)
+    rows = []
+    for eps in [0.10, 0.15, 0.20, 0.25, 0.30]:
+        for vote, xi_fn in [("uni", theory.xi_for_epsilon_univote),
+                            ("sim", lambda e, s: theory.xi_for_epsilon_simvote(
+                                e, s, v=2.0))]:
+            xi = xi_fn(eps, sigma2)
+            k = max(2, int(np.ceil(xi * len(members))))
+            ests, errs = [], []
+            for _ in range(30):
+                idx = rng.choice(len(members), size=k, replace=False)
+                score = x[idx].mean()
+                vote_label = score >= 0.5
+                est = (x == vote_label).mean() if vote_label else (x == 0).mean()
+                ests.append(max(est, 1 - est))
+                errs.append(abs(score - mu))
+            emit(f"table5/{vote}/eps={eps:.2f}", 0.0,
+                 f"xi_permil={xi*1000:.1f};est={np.mean(ests):.4f};"
+                 f"err={np.mean(errs):.4f};cluster_conf={conf:.4f}")
+            rows.append((vote, eps, xi, float(np.mean(ests)),
+                         float(np.mean(errs))))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: datasets, oracles, method runners, CSV output."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (CSVConfig, SemanticTable, SyntheticOracle, ProxyModel,
+                        reference_filter)
+from repro.core.operators import accuracy_f1
+from repro.data import make_dataset
+
+# "pricing" for derived cost metrics: oracle-vs-proxy relative cost (the
+# paper uses LLaMA-8B oracle vs 3B proxy => ~2.7x weight per call)
+ORACLE_COST, PROXY_COST = 1.0, 0.375
+
+
+def run_method(table, truth, token_lens, method, flip=0.02, cfg=None,
+               proxy_kw=None, seed=7, **kw):
+    oracle = SyntheticOracle(truth, flip_prob=flip, seed=seed,
+                             token_lens=token_lens)
+    t0 = time.time()
+    if method == "reference":
+        r = reference_filter(len(truth), oracle)
+    elif method in ("lotus", "bargain"):
+        proxy = ProxyModel(truth, token_lens=token_lens,
+                           **(proxy_kw or dict(quality=0.8, center=0.82,
+                                               concentration=0.15)))
+        r = table.sem_filter(oracle, method=method, proxy=proxy, **kw)
+    else:
+        r = table.sem_filter(oracle, method=method, cfg=cfg, **kw)
+    wall = time.time() - t0
+    acc, f1 = accuracy_f1(r.mask, truth)
+    oracle_calls = getattr(r, "n_llm_calls", getattr(r, "n_oracle_calls", 0))
+    proxy_calls = getattr(r, "n_proxy_calls", 0)
+    return {
+        "method": method, "acc": acc, "f1": f1,
+        "oracle_calls": oracle_calls, "proxy_calls": proxy_calls,
+        "weighted_calls": oracle_calls * ORACLE_COST + proxy_calls * PROXY_COST,
+        "tokens": getattr(r, "input_tokens", 0) + getattr(r, "output_tokens", 0),
+        "wall_s": wall,
+        "result": r,
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Scaffold contract: ``name,us_per_call,derived`` CSV line."""
+    print(f"{name},{us_per_call:.3f},{derived}")

@@ -1,0 +1,59 @@
+"""Before/after perf comparison across dry-run tags -> markdown for
+EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline_report import ART, model_flops_per_device
+
+
+def load(tag):
+    out = {}
+    for f in sorted(ART.glob(f"*__{tag}.json")):
+        a = json.loads(f.read_text())
+        if a.get("ok") and not a.get("skipped_by_design"):
+            out[(a["arch"], a["shape"], a["mesh"])] = a
+    return out
+
+
+def fmt(a):
+    t = a["roofline_terms"]
+    temp = a["memory"].get("temp_size_in_bytes", 0) / 1e9
+    mf = model_flops_per_device(a["arch"], a["shape"], a["chips"])
+    dom_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    frac = (mf / 197e12) / max(dom_s, 1e-30)
+    return t, temp, frac
+
+
+def compare(base_tag="baseline2", opt_tag="opt", mesh="pod"):
+    base, opt = load(base_tag), load(opt_tag)
+    lines = [
+        "| arch | shape | term | before | after | Δ |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        if key not in opt or key[2] != mesh:
+            continue
+        (tb, mb, fb), (to, mo, fo) = fmt(base[key]), fmt(opt[key])
+        for term, label in [("compute_s", "compute"), ("memory_s", "memory"),
+                            ("collective_s", "collective")]:
+            b, o = tb[term] * 1e3, to[term] * 1e3
+            if b < 0.05 and o < 0.05:
+                continue
+            d = (b - o) / b * 100 if b else 0.0
+            lines.append(f"| {key[0]} | {key[1]} | {label} | {b:.1f} ms | "
+                         f"{o:.1f} ms | {d:+.0f}% |")
+        lines.append(f"| {key[0]} | {key[1]} | HBM temp | {mb:.1f} GB | "
+                     f"{mo:.1f} GB | {(mb-mo)/mb*100 if mb else 0:+.0f}% |")
+        lines.append(f"| {key[0]} | {key[1]} | roofline frac | {fb:.3f} | "
+                     f"{fo:.3f} | x{fo/max(fb,1e-9):.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(compare())

@@ -1,0 +1,102 @@
+"""Roofline report generator: reads dry-run artifacts -> markdown tables.
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and HBM fit.  Used to produce
+EXPERIMENTS.md §Dry-run / §Roofline and consumed by the perf loop.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    """Analytic useful FLOPs per device: 6·N_active·tokens (train, fwd+bwd)
+    or 2·N_active·tokens (inference fwd)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n * tokens / chips
+
+
+def load_cells(tag: str = "baseline"):
+    cells = []
+    for f in sorted(ART.glob(f"*__{tag}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def row(a):
+    t = a["roofline_terms"]
+    flops = (a.get("cost_expanded", {}).get("flops")
+             or a["cost"].get("flops", 0.0))
+    mf = model_flops_per_device(a["arch"], a["shape"], a["chips"])
+    useful = mf / flops if flops else 0.0
+    hbm = (a["memory"].get("temp_size_in_bytes", 0)
+           + a["memory"].get("argument_size_in_bytes", 0))
+    dominant = a["dominant"].replace("_s", "")
+    # roofline fraction: useful-model-flops time over the dominant term —
+    # how close the dominant resource is to pure useful work
+    ideal_s = mf / 197e12
+    frac = ideal_s / max(max(t["compute_s"], t["memory_s"],
+                             t["collective_s"]), 1e-30)
+    return {
+        "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+        "compute_ms": t["compute_s"] * 1e3, "memory_ms": t["memory_s"] * 1e3,
+        "collective_ms": t["collective_s"] * 1e3, "dominant": dominant,
+        "useful_ratio": useful, "hbm_gb": hbm / 1e9,
+        "fits": hbm <= HBM_PER_CHIP, "roofline_frac": frac,
+        "tag": a.get("tag", "baseline"),
+    }
+
+
+def markdown(tag: str = "baseline", mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | comp ms | mem ms | coll ms | dominant | "
+        "model/HLO flops | HBM GB | fits | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in load_cells(tag):
+        if a.get("skipped_by_design"):
+            if a["mesh"] == mesh:
+                lines.append(f"| {a['arch']} | {a['shape']} | — | — | — | "
+                             f"skip: {a['reason'][:40]} | — | — | — | — |")
+            continue
+        if not a.get("ok") or a["mesh"] != mesh:
+            continue
+        r = row(a)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_ms']:.2f} | "
+            f"{r['memory_ms']:.2f} | {r['collective_ms']:.2f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['hbm_gb']:.1f} | {'y' if r['fits'] else 'N'} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main(small: bool = False):
+    for mesh in ["pod", "multipod"]:
+        print(f"\n### mesh={mesh} (baseline)\n")
+        print(markdown("baseline", mesh))
+
+
+if __name__ == "__main__":
+    main()

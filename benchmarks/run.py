@@ -1,0 +1,50 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dataset sizes (slow on 1 CPU core)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig4,table2,table3,table4,table5,"
+                         "fig6,appb,kernels,roofline")
+    args = ap.parse_args()
+    small = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_fig2_distance, bench_fig4_efficiency,
+                            bench_table2_quality, bench_table3_hyperparams,
+                            bench_table4_recluster, bench_table5_theory,
+                            bench_fig6_synthetic, bench_appb_backbones,
+                            bench_kernels, roofline_report)
+
+    suites = [
+        ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
+        ("table2", bench_table2_quality), ("table3", bench_table3_hyperparams),
+        ("table4", bench_table4_recluster), ("table5", bench_table5_theory),
+        ("fig6", bench_fig6_synthetic), ("appb", bench_appb_backbones),
+        ("kernels", bench_kernels), ("roofline", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(small=small)
+            print(f"# suite {name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness running
+            print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

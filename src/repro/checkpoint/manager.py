@@ -1,0 +1,161 @@
+"""Checkpointing from scratch (no orbax offline): msgpack + zstd, atomic.
+
+Layout per step:
+    <dir>/step_<n>.tmp-<nonce>/   — written first
+        shard_000.msgpack.zst     — leaf payloads (chunked)
+        MANIFEST.json             — tree structure, shapes, dtypes, checksums
+    <dir>/step_<n>/               — atomic rename on completion
+
+Fault-tolerance properties:
+- a crash mid-write leaves only a .tmp dir (ignored on restore);
+- ``latest_step`` picks the newest *committed* checkpoint;
+- restore re-shards onto whatever mesh/sharding the caller provides
+  (elastic restart onto a different topology);
+- async=True saves on a background thread (training continues), with
+  ``wait()`` joining before the next save — checkpoint/compute overlap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_pytree(tree, path: pathlib.Path, extra_meta: dict = None):
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + f".tmp-{os.getpid()}-{int(time.time()*1e3)}")
+    tmp.mkdir(parents=True, exist_ok=False)
+    cctx = zstd.ZstdCompressor(level=3)
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"leaves": [], "extra": extra_meta or {},
+                "created": time.time()}
+    shard_path = tmp / "shard_000.msgpack.zst"
+    records = []
+    for key, leaf in flat:
+        arr = np.asarray(leaf)
+        payload = arr.tobytes()
+        records.append({"key": key, "shape": list(arr.shape),
+                        "dtype": str(arr.dtype), "data": payload})
+        manifest["leaves"].append({
+            "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha1": hashlib.sha1(payload).hexdigest()})
+    blob = cctx.compress(msgpack.packb(records, use_bin_type=True))
+    shard_path.write_bytes(blob)
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)  # atomic commit
+
+
+def load_pytree(path: pathlib.Path, template=None, shardings=None,
+                verify: bool = True):
+    """Restore; optionally re-shard with a shardings tree (elastic restore)."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "MANIFEST.json").read_text())
+    dctx = zstd.ZstdDecompressor()
+    records = msgpack.unpackb(
+        dctx.decompress((path / "shard_000.msgpack.zst").read_bytes()),
+        raw=False)
+    by_key = {}
+    for rec, meta in zip(records, manifest["leaves"]):
+        if verify:
+            assert hashlib.sha1(rec["data"]).hexdigest() == meta["sha1"], \
+                f"checksum mismatch at {rec['key']}"
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])
+                            ).reshape(rec["shape"])
+        by_key[rec["key"]] = arr
+
+    if template is None:
+        return by_key, manifest["extra"]
+    flat, treedef = _flatten_with_paths(template)
+    leaves = []
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    for (key, tmpl), sh in zip(flat, shard_flat):
+        arr = by_key[key].astype(tmpl.dtype)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, manifest["extra"]
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def step_path(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:08d}"
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if p.name.endswith(".json") or ".tmp-" in p.name:
+                continue
+            try:
+                steps.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return max(steps) if steps else None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, extra_meta: dict = None,
+             async_: bool = False):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot
+
+        def work():
+            save_pytree(host_tree, self.step_path(step),
+                        dict(extra_meta or {}, step=step))
+            self._gc()
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore(self, template=None, shardings=None, step: int = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        tree, extra = load_pytree(self.step_path(step), template, shardings)
+        return step, tree, extra
+
+    def _gc(self):
+        steps = sorted(p for p in self.dir.glob("step_*")
+                       if ".tmp-" not in p.name)
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+        # clean stale tmp dirs from crashed writers
+        for p in self.dir.glob("*.tmp-*"):
+            shutil.rmtree(p, ignore_errors=True)

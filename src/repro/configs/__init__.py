@@ -1,0 +1,11 @@
+"""Architecture registry: the 10 assigned archs + the paper's own backbones.
+
+``get_config(name)`` returns the full-scale config (dry-run only);
+``smoke_config(name)`` returns a reduced same-family config that runs a real
+forward/train step on CPU.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import (ARCHS, get_config, list_archs,
+                                    smoke_config, input_specs,
+                                    LONG_CONTEXT_OK, long_context_skip_reason)

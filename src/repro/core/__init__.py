@@ -1,0 +1,18 @@
+"""The paper's contribution: Clustering-Sampling-Voting semantic filtering.
+
+Public API:
+    SemanticTable.sem_filter(predicate, method="csv", ...)  — operator form
+    semantic_filter(...)                                    — Algorithm 1
+    uni_vote / sim_vote                                     — Algorithms 2/3
+    xi_for_epsilon_*                                        — Theorems 3.3/3.6
+"""
+from repro.core.theory import (xi_for_epsilon_univote, xi_for_epsilon_simvote,
+                               vote_error_bound, epsilon_for_xi,
+                               bernstein_tail, choose_sample_size)
+from repro.core.clustering import kmeans, kmeans_predict, minibatch_kmeans_update
+from repro.core.voting import uni_vote, sim_vote
+from repro.core.csv_filter import CSVConfig, FilterResult, semantic_filter
+from repro.core.oracle import (SyntheticOracle, ModelOracle, OracleStats,
+                               ProxyModel)
+from repro.core.baselines import reference_filter, lotus_filter, bargain_filter
+from repro.core.operators import SemanticTable

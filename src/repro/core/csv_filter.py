@@ -1,0 +1,193 @@
+"""Algorithm 1: SemanticFilter(T, e, M, k, xi) — the CSV driver.
+
+Host-side orchestration (cluster queue, recursive re-clustering, fallback)
+around device-side batched math (k-means assignment, voting kernels) and
+batched oracle invocations.  The driver is *restartable*: its state is the
+oracle memo plus the deterministic RNG seed, so a preempted run resumes by
+replaying decisions against cached LLM calls (no re-invocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import theory
+from repro.core.clustering import kmeans
+from repro.core.voting import sim_vote, uni_vote
+
+
+@dataclasses.dataclass
+class CSVConfig:
+    n_clusters: int = 4
+    xi: float = 0.005
+    min_sample: int = 101
+    lb: float = 0.15
+    ub: Optional[float] = None  # default 1 - lb
+    max_recluster: int = 3
+    vote: str = "uni"  # "uni" | "sim"
+    epsilon: Optional[float] = None  # if set, xi is derived from Thm 3.3/3.6
+    theory_l: float = 0.9996
+    sim_v: float = 2.0
+    sim_bandwidth: Optional[float] = None
+    kmeans_iters: int = 50
+    seed: int = 0
+
+    @property
+    def ub_(self) -> float:
+        return self.ub if self.ub is not None else 1.0 - self.lb
+
+
+@dataclasses.dataclass
+class FilterResult:
+    mask: np.ndarray  # (N,) bool — tuples passing the filter
+    n_llm_calls: int
+    input_tokens: int
+    output_tokens: int
+    n_voted: int  # tuples decided by voting (no LLM call)
+    n_fallback: int  # tuples decided by the final linear fallback
+    recluster_rounds: int
+    recluster_time_s: float
+    total_time_s: float
+    cluster_log: list  # per-cluster (size, sample, score stats) records
+    xi_used: float
+
+
+def _derive_xi(cfg: CSVConfig, sigma2: float) -> float:
+    if cfg.epsilon is None:
+        return cfg.xi
+    if cfg.vote == "sim":
+        return theory.xi_for_epsilon_simvote(cfg.epsilon, sigma2, cfg.theory_l,
+                                             cfg.sim_v)
+    return theory.xi_for_epsilon_univote(cfg.epsilon, sigma2, cfg.theory_l)
+
+
+def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
+                    precomputed_assign: Optional[np.ndarray] = None
+                    ) -> FilterResult:
+    """Run CSV over a table represented by its tuple embeddings.
+
+    embeddings: (N, D) — generated offline (paper phase 1).
+    oracle: callable(ids)->bool array with .stats (see repro.core.oracle).
+    """
+    cfg = cfg or CSVConfig()
+    t0 = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    n = embeddings.shape[0]
+    emb = np.asarray(embeddings, dtype=np.float32)
+    result = np.zeros(n, dtype=bool)
+    decided = np.zeros(n, dtype=bool)
+    calls_before = oracle.stats.n_calls
+    lb, ub = cfg.lb, cfg.ub_
+    xi = _derive_xi(cfg, sigma2=0.25)  # worst-case sigma before seeing data
+    cluster_log = []
+    recluster_time = 0.0
+    n_voted = 0
+    n_fallback = 0
+    rounds_used = 0
+
+    # ---- initial clustering (offline phase; query-agnostic) ----
+    if precomputed_assign is not None:
+        assign = np.asarray(precomputed_assign)
+    else:
+        key = jax.random.key(cfg.seed)
+        _, assign, _ = kmeans(key, jnp.asarray(emb), cfg.n_clusters,
+                              max_iters=cfg.kmeans_iters)
+        assign = np.asarray(assign)
+
+    queue = [np.nonzero(assign == c)[0] for c in range(int(assign.max()) + 1)]
+    queue = [c for c in queue if len(c)]
+
+    depth = 0
+    while queue and depth <= cfg.max_recluster:
+        undetermined: list[np.ndarray] = []
+        for cluster in queue:
+            m = len(cluster)
+            n_sample = theory.choose_sample_size(m, xi, cfg.min_sample)
+            sample_local = rng.choice(m, size=n_sample, replace=False)
+            sample_ids = cluster[sample_local]
+            labels = oracle(sample_ids)
+            result[sample_ids] = labels
+            decided[sample_ids] = True
+
+            rest_mask = np.ones(m, dtype=bool)
+            rest_mask[sample_local] = False
+            rest_ids = cluster[rest_mask]
+            if len(rest_ids) == 0:
+                cluster_log.append({"size": m, "sampled": n_sample,
+                                    "score": float(np.mean(labels)),
+                                    "depth": depth, "outcome": "exhausted"})
+                continue
+
+            if cfg.vote == "sim":
+                vr = sim_vote(emb[rest_ids], emb[sample_ids],
+                              labels.astype(np.float32), lb, ub,
+                              cfg.sim_bandwidth)
+            else:
+                vr = uni_vote(labels.astype(np.float32), len(rest_ids), lb, ub)
+
+            result[rest_ids[vr.decided_true]] = True
+            decided[rest_ids[vr.decided_true]] = True
+            result[rest_ids[vr.decided_false]] = False
+            decided[rest_ids[vr.decided_false]] = True
+            n_voted += len(vr.decided_true) + len(vr.decided_false)
+            if len(vr.undetermined):
+                undetermined.append(rest_ids[vr.undetermined])
+            cluster_log.append({
+                "size": m, "sampled": n_sample,
+                "score": float(np.mean(labels)),
+                "voted": int(len(vr.decided_true) + len(vr.decided_false)),
+                "undetermined": int(len(vr.undetermined)),
+                "depth": depth,
+                "outcome": "vote" if not len(vr.undetermined) else "recluster",
+            })
+
+        if not undetermined:
+            break
+        pending = np.concatenate(undetermined)
+        depth += 1
+        rounds_used = depth
+        if depth > cfg.max_recluster:
+            # final fallback: direct LLM evaluation (bounded error by design)
+            labels = oracle(pending)
+            result[pending] = labels
+            decided[pending] = True
+            n_fallback += len(pending)
+            queue = []
+        else:
+            t_rc = time.time()
+            key = jax.random.key(cfg.seed + depth)
+            k = min(cfg.n_clusters, len(pending))
+            if len(pending) <= cfg.min_sample:
+                labels = oracle(pending)
+                result[pending] = labels
+                decided[pending] = True
+                n_fallback += len(pending)
+                queue = []
+            else:
+                _, sub_assign, _ = kmeans(key, jnp.asarray(emb[pending]), k,
+                                          max_iters=cfg.kmeans_iters)
+                sub_assign = np.asarray(sub_assign)
+                queue = [pending[sub_assign == c] for c in range(k)]
+                queue = [c for c in queue if len(c)]
+            recluster_time += time.time() - t_rc
+
+    assert decided.all(), "driver must decide every tuple"
+    st = oracle.stats
+    return FilterResult(
+        mask=result,
+        n_llm_calls=st.n_calls - calls_before,
+        input_tokens=st.input_tokens,
+        output_tokens=st.output_tokens,
+        n_voted=n_voted,
+        n_fallback=n_fallback,
+        recluster_rounds=rounds_used,
+        recluster_time_s=recluster_time,
+        total_time_s=time.time() - t0,
+        cluster_log=cluster_log,
+        xi_used=xi,
+    )

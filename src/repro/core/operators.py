@@ -1,0 +1,92 @@
+"""Semantic-operator API: the user-facing declarative layer (Lotus-style).
+
+``SemanticTable`` holds texts + (lazily computed) embeddings and exposes
+``sem_filter`` with selectable execution methods.  The planner derives the
+sample ratio from a user error tolerance via the paper's theorems and keeps
+per-predicate call caches (restart-safe, update-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.baselines import bargain_filter, lotus_filter, reference_filter
+from repro.core.csv_filter import CSVConfig, FilterResult, semantic_filter
+
+
+class SemanticTable:
+    """A table of tuples with text payloads and a semantic-filter operator."""
+
+    def __init__(self, texts: Sequence[str] = None, embeddings=None,
+                 embedder: Callable = None):
+        assert texts is not None or embeddings is not None
+        self.texts = list(texts) if texts is not None else None
+        self._embeddings = (np.asarray(embeddings, np.float32)
+                            if embeddings is not None else None)
+        self._embedder = embedder
+        self._assign_cache: dict[int, np.ndarray] = {}
+
+    def __len__(self):
+        if self.texts is not None:
+            return len(self.texts)
+        return len(self._embeddings)
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        if self._embeddings is None:
+            assert self._embedder is not None, "no embeddings and no embedder"
+            self._embeddings = np.asarray(self._embedder(self.texts), np.float32)
+        return self._embeddings
+
+    def precluster(self, n_clusters: int, seed: int = 0) -> np.ndarray:
+        """Offline phase: cluster once, reuse across predicates."""
+        key = (n_clusters, seed)
+        if key not in self._assign_cache:
+            import jax
+            import jax.numpy as jnp
+            from repro.core.clustering import kmeans
+            _, assign, _ = kmeans(jax.random.key(seed),
+                                  jnp.asarray(self.embeddings), n_clusters)
+            self._assign_cache[key] = np.asarray(assign)
+        return self._assign_cache[key]
+
+    def sem_filter(self, oracle, method: str = "csv",
+                   cfg: Optional[CSVConfig] = None, proxy=None,
+                   reuse_clustering: bool = True, **kw):
+        """Evaluate a semantic predicate.
+
+        method: "csv" (UniVote), "csv-sim" (SimVote), "reference",
+                "lotus", "bargain".
+        """
+        n = len(self)
+        if method == "reference":
+            return reference_filter(n, oracle)
+        if method == "lotus":
+            assert proxy is not None
+            return lotus_filter(n, proxy, oracle, **kw)
+        if method == "bargain":
+            assert proxy is not None
+            return bargain_filter(n, proxy, oracle, **kw)
+        cfg = cfg or CSVConfig()
+        if method == "csv-sim":
+            cfg = dataclasses.replace(cfg, vote="sim")
+        assign = (self.precluster(cfg.n_clusters, cfg.seed)
+                  if reuse_clustering else None)
+        return semantic_filter(self.embeddings, oracle, cfg,
+                               precomputed_assign=assign)
+
+
+def accuracy_f1(pred: np.ndarray, truth: np.ndarray) -> tuple[float, float]:
+    """The paper's quality metrics."""
+    pred = np.asarray(pred, bool)
+    truth = np.asarray(truth, bool)
+    acc = float(np.mean(pred == truth))
+    tp = float(np.sum(pred & truth))
+    fp = float(np.sum(pred & ~truth))
+    fn = float(np.sum(~pred & truth))
+    prec = tp / max(tp + fp, 1e-9)
+    rec = tp / max(tp + fn, 1e-9)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+    return acc, f1

@@ -1,0 +1,164 @@
+"""LLM oracle interfaces: M(t, e) -> {True, False} plus accounting.
+
+Two families:
+- SyntheticOracle: ground-truth labels + a calibrated Bernoulli flip channel
+  modelling LLM non-determinism (the paper runs temperature 0.7).  Used for
+  statistically controlled benchmarks (Tables 2-5 analogues).
+- ModelOracle: a real JAX backbone served through repro.serving; the binary
+  decision is the yes/no logit margin at the first generated position —
+  the TPU-friendly equivalent of the paper's output-token parse.
+
+All oracles count calls and tokens (the paper's efficiency metrics) and
+memoize by tuple id — the memo doubles as the §3.1 update cache and makes
+the CSV driver restartable (fault tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class OracleStats:
+    n_calls: int = 0
+    n_cached: int = 0
+    input_tokens: int = 0
+    output_tokens: int = 0
+
+    def clone(self):
+        return dataclasses.replace(self)
+
+
+class BaseOracle:
+    """Batched, memoized oracle."""
+
+    def __init__(self):
+        self.stats = OracleStats()
+        self._memo: dict[int, bool] = {}
+
+    def _evaluate(self, ids: np.ndarray) -> np.ndarray:  # -> bool array
+        raise NotImplementedError
+
+    def _tokens_of(self, ids: np.ndarray) -> int:
+        return int(len(ids)) * 64  # overridden where real text exists
+
+    def __call__(self, ids) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        out = np.zeros(len(ids), dtype=bool)
+        missing, missing_pos = [], []
+        for pos, i in enumerate(ids):
+            if int(i) in self._memo:
+                out[pos] = self._memo[int(i)]
+                self.stats.n_cached += 1
+            else:
+                missing.append(int(i))
+                missing_pos.append(pos)
+        if missing:
+            mids = np.asarray(missing, dtype=np.int64)
+            labels = self._evaluate(mids)
+            for i, lab in zip(missing, labels):
+                self._memo[i] = bool(lab)
+            out[missing_pos] = labels
+            self.stats.n_calls += len(missing)
+            self.stats.input_tokens += self._tokens_of(mids)
+            self.stats.output_tokens += len(missing)  # 1 decision token each
+        return out
+
+    # --- persistence (fault tolerance / §3.1 update cache) ---
+    def memo_snapshot(self) -> dict:
+        return dict(self._memo)
+
+    def memo_restore(self, snap: dict):
+        self._memo.update({int(k): bool(v) for k, v in snap.items()})
+
+
+class SyntheticOracle(BaseOracle):
+    def __init__(self, labels: np.ndarray, flip_prob: float = 0.0,
+                 seed: int = 0, token_lens: Optional[np.ndarray] = None):
+        super().__init__()
+        self.labels = np.asarray(labels, dtype=bool)
+        self.flip_prob = float(flip_prob)
+        self.rng = np.random.default_rng(seed)
+        self.token_lens = token_lens
+
+    def _evaluate(self, ids):
+        lab = self.labels[ids].copy()
+        if self.flip_prob > 0:
+            flips = self.rng.random(len(ids)) < self.flip_prob
+            lab ^= flips
+        return lab
+
+    def _tokens_of(self, ids):
+        if self.token_lens is None:
+            return super()._tokens_of(ids)
+        return int(np.sum(self.token_lens[ids]))
+
+
+class ProxyModel:
+    """Cascade proxy (Lotus/BARGAIN baselines): label + confidence score.
+
+    Synthetic variant: score = calibated-or-miscalibrated sigmoid of the
+    true margin.  ``concentration`` < 1 reproduces the paper's Fig. 1(a)
+    pathology (scores bunched in a narrow band, weak label separation).
+    """
+
+    def __init__(self, labels: np.ndarray, quality: float = 1.5,
+                 center: float = 0.5, concentration: float = 1.0,
+                 seed: int = 1, token_lens: Optional[np.ndarray] = None):
+        self.labels = np.asarray(labels, dtype=bool)
+        rng = np.random.default_rng(seed)
+        margin = (self.labels.astype(np.float64) * 2 - 1) * quality
+        noise = rng.normal(0, 1.0, len(self.labels))
+        raw = 1.0 / (1.0 + np.exp(-(margin + noise)))
+        self.scores = center + (raw - 0.5) * concentration
+        self.scores = np.clip(self.scores, 0.0, 1.0)
+        self.stats = OracleStats()
+        self.token_lens = token_lens
+
+    def __call__(self, ids) -> tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(ids, dtype=np.int64)
+        self.stats.n_calls += len(ids)
+        if self.token_lens is not None:
+            self.stats.input_tokens += int(np.sum(self.token_lens[ids]))
+        else:
+            self.stats.input_tokens += len(ids) * 64
+        self.stats.output_tokens += len(ids)
+        return self.scores[ids] > 0.5, self.scores[ids]
+
+
+class ModelOracle(BaseOracle):
+    """Oracle backed by a JAX backbone via the serving engine.
+
+    decision(t) = logit("yes") > logit("no") at the first generated position
+    for the prompt [instruction; predicate; tuple-text].
+    """
+
+    def __init__(self, engine, tokenizer, predicate: str,
+                 texts: Sequence[str], yes_id: int = None, no_id: int = None,
+                 instruction: str = "Answer yes or no: does the text satisfy "
+                                    "the condition?"):
+        super().__init__()
+        self.engine = engine
+        self.tok = tokenizer
+        self.predicate = predicate
+        self.texts = texts
+        self.instruction = instruction
+        self.yes_id = yes_id if yes_id is not None else tokenizer.token_id("yes")
+        self.no_id = no_id if no_id is not None else tokenizer.token_id("no")
+        self._tok_cache: dict[int, list[int]] = {}
+
+    def _prompt_ids(self, i: int):
+        if i not in self._tok_cache:
+            text = f"{self.instruction}\ncondition: {self.predicate}\ntext: {self.texts[i]}\nanswer:"
+            self._tok_cache[i] = self.tok.encode(text)
+        return self._tok_cache[i]
+
+    def _evaluate(self, ids):
+        prompts = [self._prompt_ids(int(i)) for i in ids]
+        logits = self.engine.first_token_logits(prompts)  # (B, V)
+        return np.asarray(logits[:, self.yes_id] > logits[:, self.no_id])
+
+    def _tokens_of(self, ids):
+        return int(sum(len(self._prompt_ids(int(i))) for i in ids))

@@ -1,0 +1,74 @@
+"""Voting strategies (paper Algorithms 2 & 3).
+
+UniVote: one cluster-level score |O+|/|O| compared to (lb, ub).
+SimVote: per-tuple similarity-weighted score; the (N_unsampled x M_sampled)
+similarity matrix is streamed through the Pallas simvote kernel on TPU
+(never materialized in HBM) and through the jnp reference elsewhere.
+
+Similarity: Gaussian kernel sim(ei,ej) = exp(-||ei-ej||^2 / (2 tau^2)) with
+a self-tuning bandwidth (median sampled-pair distance) unless given.  The
+paper leaves sim() unspecified; a monotone-decreasing function of L2
+distance matches its Fig. 2 analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.simvote.ops import simvote_scores
+
+
+@dataclasses.dataclass
+class VoteResult:
+    decided_true: np.ndarray  # indices (into the cluster) voted True
+    decided_false: np.ndarray
+    undetermined: np.ndarray
+    scores: np.ndarray  # per unsampled tuple (SimVote) or scalar (UniVote)
+
+
+def uni_vote(sample_labels: np.ndarray, n_unsampled: int, lb: float,
+             ub: float) -> VoteResult:
+    """Algorithm 2: every unsampled tuple gets the same cluster-level vote."""
+    score = float(np.mean(sample_labels)) if len(sample_labels) else 0.0
+    idx = np.arange(n_unsampled)
+    empty = np.array([], dtype=np.int64)
+    if score >= ub:
+        return VoteResult(idx, empty, empty, np.full(n_unsampled, score))
+    if score <= lb:
+        return VoteResult(empty, idx, empty, np.full(n_unsampled, score))
+    return VoteResult(empty, empty, idx, np.full(n_unsampled, score))
+
+
+def default_bandwidth(emb_sampled: np.ndarray) -> float:
+    """Self-tuning tau: median pairwise distance over (a subset of) samples."""
+    m = emb_sampled.shape[0]
+    if m < 2:
+        return 1.0
+    sub = emb_sampled[: min(m, 256)]
+    d2 = np.sum((sub[:, None, :] - sub[None, :, :]) ** 2, axis=-1)
+    med = float(np.median(np.sqrt(d2[np.triu_indices(len(sub), 1)])))
+    return max(med, 1e-6)
+
+
+def sim_vote(emb_unsampled: np.ndarray, emb_sampled: np.ndarray,
+             sample_labels: np.ndarray, lb: float, ub: float,
+             bandwidth: Optional[float] = None) -> VoteResult:
+    """Algorithm 3: per-tuple similarity-weighted voting."""
+    n = emb_unsampled.shape[0]
+    idx = np.arange(n)
+    empty = np.array([], dtype=np.int64)
+    if n == 0:
+        z = np.zeros(0)
+        return VoteResult(empty, empty, empty, z)
+    tau = bandwidth or default_bandwidth(emb_sampled)
+    scores = np.asarray(simvote_scores(
+        jnp.asarray(emb_unsampled, jnp.float32),
+        jnp.asarray(emb_sampled, jnp.float32),
+        jnp.asarray(sample_labels, jnp.float32), tau))
+    dec_t = idx[scores >= ub]
+    dec_f = idx[scores <= lb]
+    und = idx[(scores > lb) & (scores < ub)]
+    return VoteResult(dec_t, dec_f, und, scores)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import make_dataset, DATASETS, SynthDataset
+from repro.data.tokenizer import HashTokenizer
+from repro.data.loader import PackedLoader

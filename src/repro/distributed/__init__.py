@@ -1,0 +1,2 @@
+from repro.distributed.api import shard_act, sharding_context, current_rules
+from repro.distributed.rules import MeshRules, resolve_spec, DEFAULT_LOGICAL_RULES

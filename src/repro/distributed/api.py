@@ -1,0 +1,49 @@
+"""Sharding-context API.
+
+Model code annotates activations with *logical* axis names via ``shard_act``.
+When a ``sharding_context`` is active (the launcher / dry-run install one),
+the names resolve through the mesh rules to ``NamedSharding`` constraints;
+outside any context (CPU unit tests) the calls are no-ops, so the same model
+code runs single-device and on the production mesh unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_context(rules):
+    """rules: a MeshRules instance (see repro.distributed.rules)."""
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard_act(x, logical_axes: tuple):
+    """Constrain activation x to the sharding implied by logical axis names.
+
+    ``logical_axes`` length must equal x.ndim; entries are logical names
+    (resolved via the active MeshRules) or None (replicated / unconstrained).
+    No-op when no sharding context is active.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.activation_spec(logical_axes, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))

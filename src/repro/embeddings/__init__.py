@@ -1,0 +1,1 @@
+from repro.embeddings.encoder import EmbeddingModel, encode_texts

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Four kernels, each a package with kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper with platform dispatch) and ref.py (pure-jnp oracle):
+
+- kmeans:            tiled pairwise ||x-c||^2 + fused argmin (CSV phase 1)
+- simvote:           streaming similarity-weighted vote (Algorithm 3) -- the
+                     N x M similarity matrix never hits HBM
+- flash_attention:   causal/SWA GQA prefill attention (serving the oracle LLM)
+- decode_attention:  single-token flash-decoding over a KV cache
+
+On non-TPU backends the ops fall back to the jnp reference; kernels are
+validated against refs in interpret mode (tests/kernels/).
+"""

@@ -1,0 +1,13 @@
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, lengths):
+    if jax.default_backend() == "tpu":
+        return decode_attention_pallas(q, k, v, lengths)
+    return decode_attention_ref(q, k, v, lengths)

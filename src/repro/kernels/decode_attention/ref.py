@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q (B,H,hd); k/v (B,KV,L,hd); lengths (B,) valid prefix -> (B,H,hd)."""
+    B, H, hd = q.shape
+    KV, L = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bcgh,bclh->bcgl", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(L)[None, :] < lengths[:, None]  # (B, L)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcgl,bclh->bcgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: causal/SWA GQA flash attention (prefill path).
+
+TPU adaptation of FlashAttention-2 for the serving engine's prefill:
+- grid (B*H, nQ, nK); K innermost so the online-softmax state (m, l, acc)
+  lives in VMEM scratch across the K sweep of one Q tile;
+- GQA via BlockSpec index_map: KV tiles are addressed at head h // G —
+  no KV head replication in HBM (same trick as the jnp path);
+- causal + sliding-window masking from absolute positions; fully-masked
+  tiles still stream (Pallas grids are static) — the banded *schedule*
+  optimization lives one level up in models/layers.py where block indices
+  are static.
+MXU-aligned tiles: block_q x hd and block_k x hd with hd in {64,128,256}.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, n_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kj * block_k + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q (B,H,Sq,hd); k/v (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    n_k = Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B * H, Sq, hd)
+    kr = k.reshape(B * KV, Sk, hd)
+    vr = v.reshape(B * KV, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh // G, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh // G, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, hd)

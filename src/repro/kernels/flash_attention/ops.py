@@ -1,0 +1,13 @@
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    if jax.default_backend() == "tpu":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

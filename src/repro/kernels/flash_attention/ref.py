@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q (B,H,Sq,hd); k/v (B,KV,Sk,hd); H % KV == 0 -> out (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qf = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bcgqh,bckh->bcgqk", qf, kf) / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(k.shape[2])[None, :]
+        m = kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcgqk,bckh->bcgqh", p, vf)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

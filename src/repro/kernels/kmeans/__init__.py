@@ -1,0 +1,1 @@
+from repro.kernels.kmeans.ops import assign_clusters

@@ -1,0 +1,14 @@
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kmeans.kernel import assign_clusters_pallas
+from repro.kernels.kmeans.ref import assign_clusters_ref
+
+
+def assign_clusters(x, cents):
+    """(assign (N,) int32, dmin (N,) f32) — platform-dispatched."""
+    if jax.default_backend() == "tpu":
+        return assign_clusters_pallas(x, cents)
+    return assign_clusters_ref(x, cents)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the k-means assignment step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def assign_clusters_ref(x, cents):
+    """x (N,D), cents (K,D) -> (assign (N,) int32, dmin (N,) f32).
+
+    Squared-L2 distances via the expansion ||x||^2 - 2 x.c + ||c||^2.
+    """
+    xf = x.astype(jnp.float32)
+    cf = cents.astype(jnp.float32)
+    xsq = jnp.sum(jnp.square(xf), axis=-1, keepdims=True)  # (N,1)
+    csq = jnp.sum(jnp.square(cf), axis=-1)  # (K,)
+    d = xsq - 2.0 * (xf @ cf.T) + csq[None, :]  # (N,K)
+    d = jnp.maximum(d, 0.0)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32), jnp.min(d, axis=-1)

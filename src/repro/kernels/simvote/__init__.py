@@ -1,0 +1,1 @@
+from repro.kernels.simvote.ops import simvote_scores

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: streaming similarity-weighted voting (Algorithm 3).
+
+TPU adaptation: the paper's torch implementation materializes the full
+(N x M) similarity matrix.  Here each (BN x BM) tile lives only in VMEM;
+running numerator/denominator accumulate across the M grid dimension
+(flash-attention-style online reduction), so HBM traffic is O(N*D + M*D),
+not O(N*M).  Numerics: exp(-d2/2tau^2) is bounded in (0,1], so no max
+rebasing is needed — a plain two-accumulator sum is exact in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _simvote_kernel(x_ref, s_ref, y_ref, inv2t2_ref, num_ref, den_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (BN, D)
+    s = s_ref[...].astype(jnp.float32)  # (BM, D)
+    y = y_ref[...].astype(jnp.float32)  # (1, BM); 0/1 labels, -1 = pad
+    inv2t2 = inv2t2_ref[0, 0]
+    xsq = jnp.sum(x * x, axis=-1, keepdims=True)
+    ssq = jnp.sum(s * s, axis=-1)[None, :]
+    d2 = jnp.maximum(xsq - 2.0 * lax.dot_general(
+        x, s, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + ssq, 0.0)  # (BN, BM)
+    w = jnp.exp(-d2 * inv2t2)
+    valid = (y >= 0.0)
+    w = jnp.where(valid, w, 0.0)
+    num_ref[...] += w @ jnp.where(valid, y, 0.0).reshape(-1, 1)  # (BN,1)
+    den_ref[...] += jnp.sum(w, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def simvote_scores_pallas(x, s, y, tau, block_n: int = 256,
+                          block_m: int = 256, interpret: bool = False):
+    """x (N,D), s (M,D), y (M,) -> scores (N,)."""
+    n, d = x.shape
+    m = s.shape[0]
+    n_pad = (n + block_n - 1) // block_n * block_n
+    m_pad = (m + block_m - 1) // block_m * block_m
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    if m_pad != m:
+        s = jnp.pad(s, ((0, m_pad - m), (0, 0)))
+        y = jnp.pad(y.astype(jnp.float32), (0, m_pad - m),
+                    constant_values=-1.0)  # -1 marks padding
+    y2 = y.astype(jnp.float32).reshape(1, m_pad)
+    inv2t2 = jnp.array([[1.0 / (2.0 * tau * tau)]], jnp.float32)
+
+    num, den = pl.pallas_call(
+        _simvote_kernel,
+        grid=(n_pad // block_n, m_pad // block_m),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, s, y2, inv2t2)
+    return (num[:n, 0] / jnp.maximum(den[:n, 0], 1e-30))

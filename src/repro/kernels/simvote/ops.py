@@ -1,0 +1,13 @@
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.simvote.kernel import simvote_scores_pallas
+from repro.kernels.simvote.ref import simvote_scores_ref
+
+
+def simvote_scores(x, s, y, tau):
+    if jax.default_backend() == "tpu":
+        return simvote_scores_pallas(x, s, y, tau)
+    return simvote_scores_ref(x, s, y, float(tau))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for SimVote scoring (paper Eq. 4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def simvote_scores_ref(x, s, y, tau: float):
+    """x (N,D) unsampled, s (M,D) sampled, y (M,) in {0,1} -> scores (N,).
+
+    score_i = sum_j w_ij y_j / sum_j w_ij,  w_ij = exp(-||x_i - s_j||^2 / 2 tau^2)
+    """
+    xf, sf = x.astype(jnp.float32), s.astype(jnp.float32)
+    d2 = (jnp.sum(xf * xf, -1, keepdims=True)
+          - 2.0 * xf @ sf.T + jnp.sum(sf * sf, -1)[None, :])  # (N,M)
+    w = jnp.exp(-jnp.maximum(d2, 0.0) / (2.0 * tau * tau))
+    num = w @ y.astype(jnp.float32)
+    den = jnp.sum(w, axis=-1)
+    return num / jnp.maximum(den, 1e-30)

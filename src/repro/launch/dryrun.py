@@ -1,0 +1,406 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks device count at first init.
+# This flag is set ONLY here — tests and benches see the single real device.
+
+import argparse  # noqa: E402
+import ast  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (get_config, input_specs, list_archs,  # noqa: E402
+                           long_context_skip_reason)
+from repro.distributed.api import sharding_context  # noqa: E402
+from repro.distributed.rules import MeshRules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+from repro.train.optimizer import OptConfig, adamw_init, opt_logical_axes  # noqa: E402
+from repro.train.trainer import make_train_step  # noqa: E402
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLLECTIVES = ["all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"]
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective traffic from post-SPMD HLO.
+
+    CPU HLO dumps put shapes only on results, so operand bytes are derived
+    from the result shape + replica group size N:
+      all-gather: operand = result / N; all-reduce / all-to-all /
+      collective-permute: operand = result; reduce-scatter: operand = result*N.
+    ``wire_bytes`` additionally estimates ring-algorithm bytes on the ICI
+    links (all-reduce 2x(N-1)/N, gather/scatter (N-1)/N of the full tensor).
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    wire = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for coll in _COLLECTIVES:
+            if f" {coll}(" not in line and f" {coll}-start(" not in line:
+                continue
+            eq = line.find("=")
+            op = line.find(f" {coll}")
+            if eq < 0 or op < eq:
+                continue
+            result = line[eq + 1:op]
+            rbytes = sum(_shape_bytes(d, dims)
+                         for d, dims in _SHAPE_RE.findall(result))
+            n = _group_size(line)
+            if coll == "all-gather":
+                operand = rbytes // max(1, n)
+                w = rbytes * (n - 1) // max(1, n)
+            elif coll == "reduce-scatter":
+                operand = rbytes * n
+                w = rbytes * (n - 1)
+            elif coll == "all-reduce":
+                operand = rbytes
+                w = 2 * rbytes * (n - 1) // max(1, n)
+            else:  # all-to-all, collective-permute
+                operand = rbytes
+                w = rbytes * (n - 1) // max(1, n) if coll == "all-to-all" else rbytes
+            out[coll] += operand
+            wire[coll] += w
+            counts[coll] += 1
+            break
+    return {"bytes": out, "wire_bytes": wire, "counts": counts,
+            "total_bytes": sum(out.values()),
+            "total_wire_bytes": sum(wire.values())}
+
+
+def _mem_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "host_temp_size_in_bytes",
+            "serialized_size_in_bytes"]
+    d = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            d[k] = int(v)
+    return d
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and "{" not in k}
+
+
+def _batch_shardings(mesh, rules: MeshRules, spec_tree):
+    def one(name, leaf):
+        if name in ("tokens", "targets"):
+            axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        elif name in ("prefix_embeds", "enc_frames"):
+            axes = ("batch", None, None)
+        elif name == "pos":
+            axes = ("kv_batch",)
+        else:
+            axes = (None,) * leaf.ndim
+        return NamedSharding(mesh, rules.spec(axes, leaf.shape))
+
+    return {k: one(k, v) for k, v in spec_tree.items()}
+
+
+def _tree_shardings(mesh, rules, axes_tree, abs_tree):
+    return jax.tree_util.tree_map(
+        lambda ax, leaf: NamedSharding(mesh, rules.spec(ax, leaf.shape)),
+        axes_tree, abs_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _replicated_tree(mesh, abs_tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), abs_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None,
+               oc: OptConfig = None):
+    """Lower + compile one (arch x shape x mesh) cell; return artifact dict.
+
+    Override keys starting with "_" are launcher levers, not config fields:
+      _donate:           donate params/opt (train) or cache (decode)
+      _last_only:        prefill emits last-position logits only
+      _microbatches=N:   gradient accumulation
+      _serve_replicated: drop FSDP ("embed"->data) for inference when the
+                         bf16 model-sharded weights fit comfortably in HBM
+    """
+    overrides = dict(overrides or {})
+    donate = overrides.pop("_donate", False)
+    last_only = overrides.pop("_last_only", False)
+    microbatches = overrides.pop("_microbatches", 1)
+    serve_repl = overrides.pop("_serve_replicated", False)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    art = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "overrides": dict(overrides, _donate=donate, _last_only=last_only,
+                             _microbatches=microbatches,
+                             _serve_replicated=serve_repl),
+           "ok": False}
+
+    if shape_name == "long_500k":
+        reason = long_context_skip_reason(arch)
+        if reason:
+            art.update(skipped_by_design=True, reason=reason, ok=True)
+            return art
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rules = MeshRules(mesh)
+    if serve_repl and shape.kind != "train":
+        model_ways = mesh.shape["model"]
+        shard_gb = cfg.param_count() * 2 / model_ways / 1e9
+        if shard_gb < 8.0:
+            rules.rules["embed"] = []  # replicate weights across data axis
+            art["serve_replicated_applied"] = True
+    chips = mesh.devices.size
+
+    p_axes = lm.param_logical_axes(cfg)
+    params_abs = lm.abstract_params(cfg)
+    p_shard = _tree_shardings(mesh, rules, p_axes, params_abs)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with sharding_context(rules), mesh:
+        if shape.kind == "train":
+            oc = oc or OptConfig()
+            train_step = make_train_step(cfg, oc, microbatches=microbatches)
+            opt_abs = jax.eval_shape(lambda p: adamw_init(p, oc), params_abs)
+            o_axes = opt_logical_axes(p_axes, oc)
+            o_shard = _tree_shardings(mesh, rules, o_axes, opt_abs)
+            o_shard["step"] = NamedSharding(mesh, P())
+            b_shard = _batch_shardings(mesh, rules, specs)
+            out_abs = jax.eval_shape(train_step, params_abs, opt_abs, specs)
+            out_shard = (p_shard, o_shard, _replicated_tree(mesh, out_abs[2]))
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=out_shard,
+                donate_argnums=(0, 1) if donate else (),
+            ).lower(params_abs, opt_abs, specs)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                logits, cache, pos = lm.prefill(
+                    cfg, params, batch["tokens"],
+                    prefix_embeds=batch.get("prefix_embeds"),
+                    enc_frames=batch.get("enc_frames"),
+                    max_len=shape.seq_len, last_only=last_only)
+                return logits, cache, pos
+
+            b_shard = _batch_shardings(mesh, rules, specs)
+            c_axes = lm.cache_logical_axes(cfg)
+            out_abs = jax.eval_shape(prefill_step, params_abs, specs)
+            logit_axes = (("batch", "vocab") if last_only
+                          else ("batch", None, "vocab"))
+            logits_sh = NamedSharding(
+                mesh, rules.spec(logit_axes, out_abs[0].shape))
+            cache_sh = _tree_shardings(mesh, rules, c_axes, out_abs[1])
+            pos_sh = NamedSharding(mesh, rules.spec(("kv_batch",), out_abs[2].shape))
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(logits_sh, cache_sh, pos_sh),
+            ).lower(params_abs, specs)
+        else:  # decode
+            long_ctx = shape_name == "long_500k"
+
+            def serve_step(params, cache, tokens, pos):
+                return lm.decode_step(cfg, params, cache, tokens, pos)
+
+            c_axes = lm.cache_logical_axes(cfg, long_context=long_ctx)
+            cache_abs = specs["cache"]
+            cache_sh = _tree_shardings(mesh, rules, c_axes, cache_abs)
+            tok_sh = NamedSharding(mesh, rules.spec(("kv_batch",),
+                                                    specs["tokens"].shape))
+            out_abs = jax.eval_shape(serve_step, params_abs, cache_abs,
+                                     specs["tokens"], specs["pos"])
+            logits_sh = NamedSharding(
+                mesh, rules.spec(("kv_batch", "vocab"), out_abs[0].shape))
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, cache_sh, tok_sh, tok_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            ).lower(params_abs, cache_abs, specs["tokens"], specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_dict(compiled)
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)  # legacy: loop bodies counted once
+
+    # trip-count-expanded static cost (see launch/hlo_cost.py): XLA's
+    # cost_analysis counts while bodies once, undercounting scanned programs
+    from repro.launch import hlo_cost
+    try:
+        xc = hlo_cost.analyze(hlo)
+        expanded = {
+            "flops": xc.flops, "bytes": xc.bytes,
+            "transcendentals": xc.transcendentals,
+            "coll_bytes": dict(xc.coll_bytes),
+            "coll_wire": dict(xc.coll_wire),
+            "total_coll_bytes": xc.total_coll_bytes,
+            "total_coll_wire": xc.total_coll_wire,
+        }
+    except Exception as e:  # pragma: no cover
+        expanded = {"error": f"{type(e).__name__}: {e}"}
+
+    flops = expanded.get("flops") or cost.get("flops", 0.0)
+    bytes_acc = expanded.get("bytes") or cost.get("bytes accessed", 0.0)
+    coll_total = expanded.get("total_coll_bytes", coll["total_bytes"])
+    coll_wire = expanded.get("total_coll_wire", coll["total_wire_bytes"])
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+        "collective_wire_s": coll_wire / ICI_BW,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    art.update(
+        ok=True, chips=int(chips), lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2), memory=mem, cost=cost,
+        cost_expanded=expanded,
+        collectives=coll, roofline_terms=terms, dominant=dominant,
+        params=cfg.param_count(), active_params=cfg.active_param_count(),
+        sharding_warnings=sorted(set(rules.warnings)),
+        hlo_bytes=len(hlo),
+    )
+    return art
+
+
+def cell_path(arch, shape_name, mesh_kind, tag="baseline") -> pathlib.Path:
+    safe = arch.replace("/", "_").replace(".", "_")
+    return ART_DIR / f"{safe}__{shape_name}__{mesh_kind}__{tag}.json"
+
+
+ASSIGNED = ["falcon-mamba-7b", "mixtral-8x22b", "dbrx-132b", "internvl2-26b",
+            "gemma3-12b", "stablelm-12b", "codeqwen1.5-7b", "qwen1.5-0.5b",
+            "jamba-v0.1-52b", "whisper-base"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true", help="all 40 assigned cells")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (hillclimb lever)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s, m) for a in ASSIGNED for s in SHAPES for m in meshes]
+    else:
+        archs = [args.arch] if args.arch else ASSIGNED
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s, m) for a in archs for s in shapes for m in meshes]
+
+    n_ok = n_fail = 0
+    for arch, shape_name, mesh_kind in cells:
+        path = cell_path(arch, shape_name, mesh_kind, args.tag)
+        if path.exists() and not args.force:
+            print(f"skip (exists): {path.name}")
+            continue
+        print(f"=== {arch} x {shape_name} x {mesh_kind} [{args.tag}] ===",
+              flush=True)
+        try:
+            art = build_cell(arch, shape_name, mesh_kind, overrides or None)
+        except Exception as e:
+            art = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        art["tag"] = args.tag
+        path.write_text(json.dumps(art, indent=1))
+        if art.get("ok"):
+            n_ok += 1
+            if art.get("skipped_by_design"):
+                print(f"  SKIP-BY-DESIGN: {art['reason']}")
+            else:
+                t = art["roofline_terms"]
+                print(f"  ok lower={art['lower_s']}s compile={art['compile_s']}s "
+                      f"flops/dev={art['cost'].get('flops', 0):.3e} "
+                      f"compute={t['compute_s']*1e3:.2f}ms "
+                      f"memory={t['memory_s']*1e3:.2f}ms "
+                      f"collective={t['collective_s']*1e3:.2f}ms "
+                      f"dominant={art['dominant']}", flush=True)
+                print("  memory_analysis:", art["memory"], flush=True)
+        else:
+            n_fail += 1
+            print(f"  FAIL: {art['error']}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

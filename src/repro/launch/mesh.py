@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real (single) device.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)}; "
+            "run under launch/dryrun.py (which forces 512 host devices) or "
+            "on real hardware")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_local_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many local devices exist (tests)."""
+    n = n_data * n_model
+    devices = jax.devices()[:n]
+    assert len(devices) == n, (len(jax.devices()), n)
+    return jax.make_mesh((n_data, n_model), ("data", "model"), devices=devices)

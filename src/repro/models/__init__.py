@@ -1,0 +1,2 @@
+from repro.models.config import LayerSpec, ModelConfig, ShapeCell, SHAPES, uniform_pattern
+from repro.models import layers, lm

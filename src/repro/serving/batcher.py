@@ -1,0 +1,47 @@
+"""Continuous-batching-lite: padded length buckets for prompt batches.
+
+TPU serving wants static shapes; requests are grouped into power-of-two
+length buckets and padded batches, so each (bucket_len, batch) pair hits a
+cached compiled program.  This is the fixed-shape analogue of vLLM's
+continuous batching used by the paper's serving layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+
+def bucket_len(n: int, min_bucket: int = 32, max_bucket: int = 8192) -> int:
+    return min(max_bucket, max(min_bucket, 1 << math.ceil(math.log2(max(1, n)))))
+
+
+class BucketBatcher:
+    def __init__(self, max_batch: int = 32, pad_id: int = 0,
+                 min_bucket: int = 32, max_bucket: int = 8192):
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+
+    def plan(self, prompts: Sequence[List[int]]
+             ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Group prompts -> [(orig_indices, tokens (b, L), lengths (b,))]."""
+        order = np.argsort([len(p) for p in prompts], kind="stable")
+        batches = []
+        i = 0
+        while i < len(order):
+            j = min(i + self.max_batch, len(order))
+            idx = order[i:j]
+            L = bucket_len(max(len(prompts[k]) for k in idx),
+                           self.min_bucket, self.max_bucket)
+            toks = np.full((len(idx), L), self.pad_id, np.int32)
+            lens = np.zeros(len(idx), np.int32)
+            for r, k in enumerate(idx):
+                p = prompts[k][-L:]  # truncate overlong from the left
+                toks[r, :len(p)] = p
+                lens[r] = len(p)
+            batches.append((idx, toks, lens))
+            i = j
+        return batches

@@ -1,0 +1,97 @@
+"""Batched serving engine: prefill + decode over the model zoo.
+
+Drives the oracle-LLM side of the CSV pipeline: ``first_token_logits``
+serves the semantic filter's yes/no decisions; ``generate`` serves the
+example apps.  Static-shape bucketed batching keeps compile cache hits
+high; per-(batch, bucket) jitted programs are cached.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving.batcher import BucketBatcher
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 16,
+                 pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batcher = BucketBatcher(max_batch=max_batch, pad_id=pad_id)
+        self._prefill_cache = {}
+        self._decode_fn = None
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_fn(self, L: int, with_cache: bool):
+        key = (L, with_cache)
+        if key not in self._prefill_cache:
+            cfg = self.cfg
+
+            if with_cache:
+                def f(params, tokens):
+                    return lm.prefill(cfg, params, tokens, max_len=L + 64)
+            else:
+                def f(params, tokens):
+                    logits, _ = lm.forward(cfg, params, tokens)
+                    return logits
+
+            self._prefill_cache[key] = jax.jit(f)
+        return self._prefill_cache[key]
+
+    def first_token_logits(self, prompts: Sequence[List[int]]) -> np.ndarray:
+        """Logits at each prompt's last position. (n_prompts, padded_vocab)."""
+        out = np.zeros((len(prompts), self.cfg.padded_vocab), np.float32)
+        for idx, toks, lens in self.batcher.plan(prompts):
+            logits = self._prefill_fn(toks.shape[1], False)(
+                self.params, jnp.asarray(toks))
+            last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+            out[idx] = last
+            self.stats["prefill_tokens"] += int(lens.sum())
+            self.stats["batches"] += 1
+        return out
+
+    # --------------------------------------------------------------- decode
+    def _decode(self, params, cache, tokens, pos):
+        return lm.decode_step(self.cfg, params, cache, tokens, pos)
+
+    def generate(self, prompts: Sequence[List[int]], max_new: int = 16,
+                 temperature: float = 0.0, seed: int = 0) -> List[List[int]]:
+        """Greedy/temperature decoding; returns generated ids per prompt."""
+        if self._decode_fn is None:
+            self._decode_fn = jax.jit(self._decode)
+        results: List[List[int]] = [[] for _ in prompts]
+        key = jax.random.key(seed)
+        for idx, toks, lens in self.batcher.plan(prompts):
+            L = toks.shape[1]
+            logits, cache, _ = self._prefill_fn(L, True)(
+                self.params, jnp.asarray(toks))
+            # next_pos per sequence = its true length (cache rows beyond a
+            # prompt's length contain pad K/V — masked by per-seq pos)
+            pos = jnp.asarray(lens, jnp.int32)
+            last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+            cur = jnp.asarray(self._sample(last, temperature, key))
+            for step in range(max_new):
+                for r, k in enumerate(idx):
+                    results[k].append(int(cur[r]))
+                logits_d, cache = self._decode_fn(self.params, cache, cur, pos)
+                pos = pos + 1
+                key, sub = jax.random.split(key)
+                cur = jnp.asarray(self._sample(np.asarray(logits_d),
+                                               temperature, sub))
+                self.stats["decode_tokens"] += len(idx)
+        return results
+
+    @staticmethod
+    def _sample(logits: np.ndarray, temperature: float, key) -> np.ndarray:
+        if temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        g = np.asarray(jax.random.gumbel(key, logits.shape))
+        return np.argmax(logits / temperature + g, axis=-1).astype(np.int32)

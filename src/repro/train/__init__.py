@@ -1,0 +1,2 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptConfig
+from repro.train.trainer import make_train_step, loss_fn

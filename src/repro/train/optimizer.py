@@ -1,0 +1,113 @@
+"""AdamW from scratch (no optax offline): fp32 master weights + moments.
+
+Optimizer state shards exactly like the parameters (ZeRO-3 via the same
+logical axes), so memory per device is params*(2 + 12)/n_shards bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # "cosine" | "linear" | "const"
+    keep_master: bool = True  # fp32 master copy when params are bf16
+
+
+def lr_at(oc: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, oc.warmup_steps))
+    t = jnp.clip((step - oc.warmup_steps) /
+                 max(1, oc.total_steps - oc.warmup_steps), 0.0, 1.0)
+    if oc.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif oc.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return oc.lr * warm * decay
+
+
+def adamw_init(params, oc: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+    if oc.keep_master:
+        # copy=True: when params are already fp32 an astype would alias the
+        # buffer, and donating (params, opt_state) together must not donate
+        # the same buffer twice
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return state
+
+
+def adamw_update(params, grads, state, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if oc.grad_clip > 0 else jnp.float32(1.0)
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(nhat) + oc.eps)
+                           + oc.weight_decay * base)
+        return new.astype(p.dtype), mu, nu, new
+
+    masters = state.get("master",
+                        jax.tree_util.tree_map(lambda _: None, params))
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(masters)
+    outs = [upd(p, g, mu, nu, ma)
+            for p, g, mu, nu, ma in zip(flat_p, flat_g, flat_mu, flat_nu, flat_ma)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "mu": jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]),
+        "nu": jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs]),
+    }
+    if oc.keep_master:
+        new_state["master"] = jax.tree_util.tree_unflatten(
+            treedef, [o[3] for o in outs])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_logical_axes(param_axes, oc: OptConfig):
+    """Optimizer-state logical axes mirroring the params tree."""
+    state = {
+        "step": (),
+        "mu": param_axes,
+        "nu": param_axes,
+    }
+    if oc.keep_master:
+        state["master"] = param_axes
+    return state

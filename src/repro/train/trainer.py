@@ -1,0 +1,105 @@
+"""Train step: loss, grad, microbatched accumulation, optional compression."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, adamw_update
+from repro.train.grad_compression import compress_grads
+
+
+def _ce_from_hidden(cfg, params, h, targets, chunk: int):
+    """CE over final hidden states; optionally chunked along S so the
+    (B, S, V) logits tensor never materializes (recomputed in backward)."""
+    B, S, _ = h.shape
+    mask = (targets >= 0).astype(jnp.float32)
+
+    def ce(hc, tc, mc):
+        logits = lm._logits(cfg, params, hc)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tl = jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+        return -jnp.sum(tl * mc)
+
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        total = ce(h, targets, mask)
+    else:
+        nch = S // chunk
+        hs = h.reshape(B, nch, chunk, -1).transpose(1, 0, 2, 3)
+        ts = targets.reshape(B, nch, chunk).transpose(1, 0, 2)
+        ms = mask.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+        def body(acc, xs):
+            hc, tc, mc = xs
+            return acc + ce(hc, tc, mc), None
+
+        body = jax.checkpoint(body)
+        total, _ = lax.scan(body, jnp.float32(0.0), (hs, ts, ms))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, aux_weight: float = 0.01):
+    """Causal-LM cross entropy (fp32 log-softmax; sequence-chunked)."""
+    h, aux = lm.forward_hidden(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    targets = batch["targets"]
+    P = cfg.num_prefix_embeds
+    if P:
+        h = h[:, P:]
+    loss = _ce_from_hidden(cfg, params, h, targets,
+                           getattr(cfg, "loss_chunk", 0))
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, microbatches: int = 1,
+                    compression: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    - microbatches > 1: gradient accumulation via lax.scan over batch splits
+      (bounds activation memory independently of global batch).
+    - compression: None | "int8" | "topk" — error-feedback gradient
+      compression applied before the cross-data-axis reduction.
+    """
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(
+            partial(loss_fn, cfg), has_aux=True)(params, batch)
+        return l, m, g
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            B = batch["tokens"].shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            mb = {k: v.reshape(microbatches, B // microbatches, *v.shape[1:])
+                  for k, v in batch.items()}
+
+            def acc_step(carry, mbatch):
+                gsum, lsum = carry
+                l, m, g = grads_of(params, mbatch)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = lax.scan(acc_step, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if compression:
+            grads = compress_grads(grads, method=compression)
+
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, oc)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,33 @@
+"""Wall-clock timing helper for benches (block_until_ready aware)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+class Timer:
+    def __init__(self):
+        self.start = None
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self.start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.start
+        return False
+
+
+def time_jax(fn, *args, warmup: int = 1, iters: int = 3, **kwargs) -> float:
+    """Median wall-clock seconds of fn(*args), blocking on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

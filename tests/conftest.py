@@ -1,0 +1,6 @@
+# NOTE: no XLA_FLAGS here — tests must see the single real CPU device.
+# The 512-device override belongs ONLY to repro.launch.dryrun.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,121 @@
+"""Property-based tests (seeded random sweeps; `hypothesis` is not available
+in the offline image, so each property is exercised across many generated
+cases with the same shrink-free methodology)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.voting import sim_vote, uni_vote
+from repro.core.clustering import kmeans
+from repro.kernels.kmeans.ref import assign_clusters_ref
+from repro.kernels.simvote.ref import simvote_scores_ref
+from repro.train.grad_compression import compress_with_feedback
+
+SEEDS = list(range(12))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_simvote_scores_are_convex_weights(seed):
+    """Every SimVote score is a convex combination of sample labels -> [0,1],
+    and equals the label when all samples agree."""
+    rng = np.random.default_rng(seed)
+    n, m, d = rng.integers(5, 200), rng.integers(2, 50), rng.integers(2, 33)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    s = rng.normal(size=(m, d)).astype(np.float32)
+    y = (rng.random(m) < rng.random()).astype(np.float32)
+    scores = np.asarray(simvote_scores_ref(jnp.asarray(x), jnp.asarray(s),
+                                           jnp.asarray(y), 1.0))
+    assert (scores >= -1e-6).all() and (scores <= 1 + 1e-6).all()
+    ones = np.ones(m, np.float32)
+    s_all = np.asarray(simvote_scores_ref(jnp.asarray(x), jnp.asarray(s),
+                                          jnp.asarray(ones), 1.0))
+    np.testing.assert_allclose(s_all, 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_unvote_threshold_partition(seed):
+    """UniVote decisions partition tuples exactly by (lb, ub)."""
+    rng = np.random.default_rng(seed)
+    labels = (rng.random(rng.integers(3, 300)) < rng.random())
+    lb = rng.uniform(0.01, 0.45)
+    ub = rng.uniform(lb + 0.05, 0.99)
+    nrest = int(rng.integers(1, 50))
+    vr = uni_vote(labels.astype(float), nrest, lb, ub)
+    total = len(vr.decided_true) + len(vr.decided_false) + len(vr.undetermined)
+    assert total == nrest
+    score = labels.mean()
+    if score >= ub:
+        assert len(vr.decided_true) == nrest
+    elif score <= lb:
+        assert len(vr.decided_false) == nrest
+    else:
+        assert len(vr.undetermined) == nrest
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_kmeans_assignment_is_nearest(seed):
+    """Every point's assigned centroid is its true nearest centroid."""
+    rng = np.random.default_rng(seed)
+    n, d, k = int(rng.integers(20, 300)), int(rng.integers(2, 16)), int(rng.integers(2, 8))
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    cents, assign, _ = kmeans(jax.random.key(seed), x, k, max_iters=20)
+    a2, _ = assign_clusters_ref(x, cents)
+    assert (np.asarray(assign) == np.asarray(a2)).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_xi_bounds(seed):
+    """xi formulas always land in [0, 1] and shrink with epsilon."""
+    rng = np.random.default_rng(seed)
+    s2 = float(rng.uniform(1e-4, 0.25))
+    l = float(rng.uniform(0.99, 0.99999))
+    eps = sorted(rng.uniform(0.02, 0.45, size=4))
+    xs = [theory.xi_for_epsilon_univote(e, s2, l) for e in eps]
+    assert all(0 <= v <= 1 for v in xs)
+    assert all(a >= b - 1e-12 for a, b in zip(xs, xs[1:]))
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_property_error_feedback_identity(seed):
+    """Invariant: sum(sent) + residual == sum(true gradients) exactly."""
+    rng = np.random.default_rng(seed)
+    steps = int(rng.integers(2, 20))
+    gs = [jnp.asarray(rng.normal(size=(64,)), jnp.float32) for _ in range(steps)]
+    res = {"w": jnp.zeros((64,), jnp.float32)}
+    sent = jnp.zeros((64,))
+    for g in gs:
+        c, res = compress_with_feedback({"w": g}, res, method="int8")
+        sent = sent + c["w"]
+    np.testing.assert_allclose(np.asarray(sent + res["w"]),
+                               np.asarray(sum(gs)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_property_vote_bound_holds_when_committed(seed):
+    """For random populations/samples: committed votes respect Thm 3.3's
+    error bound (up to its stated failure probability)."""
+    rng = np.random.default_rng(seed)
+    lb, ub, eps = 0.15, 0.85, 0.15
+    sigma2 = 0.25
+    xi = theory.xi_for_epsilon_univote(eps, sigma2)
+    bound = theory.vote_error_bound(lb, ub, eps)
+    bad = tot = 0
+    for _ in range(100):
+        n = int(rng.integers(500, 4000))
+        mu = float(rng.random())
+        x = rng.random(n) < mu
+        k = max(5, int(np.ceil(xi * n)))
+        idx = rng.choice(n, size=min(k, n), replace=False)
+        score = x[idx].mean()
+        err = None
+        if score >= ub:
+            err = 1 - x.mean()
+        elif score <= lb:
+            err = x.mean()
+        if err is not None:
+            tot += 1
+            bad += err > bound
+    if tot >= 20:
+        assert bad / tot <= 0.1

@@ -1,0 +1,146 @@
+"""Unit tests: voting, clustering, baselines, bm25, oracle, data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import kmeans, kmeans_predict, minibatch_kmeans_update
+from repro.core.voting import uni_vote, sim_vote
+from repro.core.bm25 import bm25_vectors, hybrid_features
+from repro.core.oracle import SyntheticOracle, ProxyModel
+from repro.data import make_dataset, HashTokenizer, PackedLoader
+
+
+# ------------------------------------------------------------------ voting
+def test_uni_vote_cases():
+    hi = uni_vote(np.ones(10), 5, 0.15, 0.85)
+    assert len(hi.decided_true) == 5 and len(hi.undetermined) == 0
+    lo = uni_vote(np.zeros(10), 5, 0.15, 0.85)
+    assert len(lo.decided_false) == 5
+    mid = uni_vote(np.array([1, 0, 1, 0]), 5, 0.15, 0.85)
+    assert len(mid.undetermined) == 5
+
+
+def test_sim_vote_prefers_near_neighbors():
+    """A tuple near positive samples scores higher than one near negatives."""
+    s = np.array([[0, 0], [10, 10]], np.float32)
+    y = np.array([1.0, 0.0])
+    x = np.array([[0.5, 0.5], [9.5, 9.5]], np.float32)
+    vr = sim_vote(x, s, y, lb=0.3, ub=0.7, bandwidth=2.0)
+    assert vr.scores[0] > 0.7 and vr.scores[1] < 0.3
+    assert 0 in vr.decided_true and 1 in vr.decided_false
+
+
+def test_sim_vote_uniform_when_equidistant():
+    s = np.array([[1, 0], [-1, 0]], np.float32)
+    y = np.array([1.0, 0.0])
+    x = np.array([[0, 5]], np.float32)
+    vr = sim_vote(x, s, y, lb=0.15, ub=0.85, bandwidth=1.0)
+    assert vr.scores[0] == pytest.approx(0.5, abs=1e-5)
+
+
+# ---------------------------------------------------------------- clustering
+def test_kmeans_recovers_separated_clusters():
+    rng = np.random.default_rng(0)
+    centers = np.array([[0, 0], [20, 0], [0, 20]], np.float32)
+    pts = np.concatenate([c + rng.normal(0, 0.5, (50, 2)) for c in centers])
+    cents, assign, inertia = kmeans(jax.random.key(0),
+                                    jnp.asarray(pts, jnp.float32), 3)
+    assign = np.asarray(assign)
+    # each true cluster maps to exactly one label
+    for i in range(3):
+        assert len(np.unique(assign[i * 50:(i + 1) * 50])) == 1
+    assert float(inertia) < 150 * 1.0
+
+
+def test_kmeans_predict_matches_train_assign():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(200, 8)), jnp.float32)
+    cents, assign, _ = kmeans(jax.random.key(1), x, 4)
+    assert (np.asarray(kmeans_predict(x, cents)) == np.asarray(assign)).all()
+
+
+def test_minibatch_update_moves_centroids_toward_batch():
+    cents = jnp.zeros((2, 2), jnp.float32).at[1].set(100.0)
+    counts = jnp.ones((2,), jnp.float32)
+    batch = jnp.asarray([[4.0, 4.0], [6.0, 6.0]], jnp.float32)
+    new, counts = minibatch_kmeans_update(cents, counts, batch)
+    assert float(jnp.linalg.norm(new[0] - 5.0)) < float(jnp.linalg.norm(cents[0] - 5.0))
+
+
+# ------------------------------------------------------------------- oracle
+def test_oracle_memoization_and_flips():
+    labels = np.array([True] * 50 + [False] * 50)
+    o = SyntheticOracle(labels, flip_prob=0.0, seed=0)
+    out = o(np.arange(100))
+    assert (out == labels).all()
+    o(np.arange(100))
+    assert o.stats.n_calls == 100 and o.stats.n_cached == 100
+
+    o2 = SyntheticOracle(labels, flip_prob=1.0, seed=0)
+    assert (o2(np.arange(100)) == ~labels).all()
+
+
+def test_proxy_concentration_controls_score_spread():
+    labels = np.random.default_rng(0).random(2000) < 0.5
+    wide = ProxyModel(labels, concentration=1.0, seed=1)
+    narrow = ProxyModel(labels, concentration=0.1, center=0.82, seed=1)
+    assert np.std(narrow.scores) < np.std(wide.scores) / 3
+    assert 0.75 < narrow.scores.mean() < 0.9  # Fig. 1(a) band
+
+
+# --------------------------------------------------------------------- bm25
+def test_bm25_separates_vocabularies():
+    a = ["python code compiler"] * 3
+    b = ["sunny weather garden"] * 3
+    vecs = bm25_vectors(a + b, dim=64)
+    sims_within = vecs[0] @ vecs[1]
+    sims_across = vecs[0] @ vecs[4]
+    assert sims_within > sims_across
+
+
+def test_hybrid_features_shapes():
+    emb = np.random.default_rng(0).normal(size=(10, 16)).astype(np.float32)
+    texts = [f"doc {i} python code" for i in range(10)]
+    assert hybrid_features(emb, texts, lam=1.0).shape == (10, 16)
+    assert hybrid_features(emb, texts, lam=0.4, bm25_dim=32).shape == (10, 48)
+
+
+# --------------------------------------------------------------------- data
+def test_datasets_have_declared_selectivity():
+    ds = make_dataset("codebase", n=5000, seed=0)
+    assert abs(ds.selectivity["CB-Q1"] - 0.033) < 0.02
+    ds2 = make_dataset("airdialogue", n=5000, seed=0)
+    assert abs(ds2.selectivity["AD-Q2"] - 0.0146) < 0.02
+
+
+def test_distance_label_agreement_decays():
+    """Fig. 2: closer pairs agree more often."""
+    ds = make_dataset("imdb_review", n=2000, seed=0)
+    rng = np.random.default_rng(0)
+    i = rng.integers(0, 2000, 4000)
+    j = rng.integers(0, 2000, 4000)
+    d = np.linalg.norm(ds.embeddings[i] - ds.embeddings[j], axis=1)
+    agree = ds.labels["RV-Q1"][i] == ds.labels["RV-Q1"][j]
+    near = agree[d < np.quantile(d, 0.2)].mean()
+    far = agree[d > np.quantile(d, 0.8)].mean()
+    assert near > far + 0.1
+
+
+def test_tokenizer_stable_and_bounded():
+    tok = HashTokenizer(1024)
+    ids = tok.encode("Hello world, hello WORLD!")
+    assert ids == tok.encode("Hello world, hello WORLD!")
+    assert all(0 <= i < 1024 for i in ids)
+    assert tok.token_id("yes") == 3 and tok.token_id("no") == 4
+
+
+def test_loader_deterministic_restart():
+    docs = [[i, i + 1, i + 2] for i in range(200)]
+    ld = PackedLoader(docs, batch=2, seq=8, seed=0)
+    b5 = ld.batch_at(5)
+    ld2 = PackedLoader(docs, batch=2, seq=8, seed=0)
+    b5b = ld2.batch_at(5)
+    assert (b5["tokens"] == b5b["tokens"]).all()
+    assert b5["tokens"].shape == (2, 8)
+    # targets are tokens shifted by one
+    assert (b5["tokens"][:, 1:] == b5["targets"][:, :-1]).all()

@@ -1,0 +1,69 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs pure-jnp refs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kmeans.kernel import assign_clusters_pallas
+from repro.kernels.kmeans.ref import assign_clusters_ref
+from repro.kernels.simvote.kernel import simvote_scores_pallas
+from repro.kernels.simvote.ref import simvote_scores_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@pytest.mark.parametrize("n,d,k", [(100, 16, 3), (257, 64, 8), (512, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign(n, d, k, dtype):
+    x = jax.random.normal(jax.random.key(n), (n, d), dtype)
+    c = jax.random.normal(jax.random.key(d), (k, d), dtype)
+    a1, d1 = assign_clusters_pallas(x, c, block_n=128, interpret=True)
+    a2, d2 = assign_clusters_ref(x, c)
+    assert (np.asarray(a1) == np.asarray(a2)).mean() > 0.999  # bf16 ties
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 16, 8), (300, 77, 32), (500, 128, 64)])
+def test_simvote(n, m, d):
+    x = jax.random.normal(jax.random.key(n), (n, d))
+    s = jax.random.normal(jax.random.key(m), (m, d))
+    y = (jax.random.uniform(jax.random.key(d), (m,)) > 0.5).astype(jnp.float32)
+    s1 = simvote_scores_pallas(x, s, y, 1.1, block_n=64, block_m=32,
+                               interpret=True)
+    s2 = simvote_scores_ref(x, s, y, 1.1)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-6)
+    assert (np.asarray(s1) >= 0).all() and (np.asarray(s1) <= 1 + 1e-6).all()
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [(1, 4, 4, 128, 64), (2, 8, 2, 256, 64),
+                                         (1, 4, 1, 128, 128)])
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, KV, S, hd, window, dtype):
+    q = jax.random.normal(jax.random.key(0), (B, H, S, hd), dtype)
+    k = jax.random.normal(jax.random.key(1), (B, KV, S, hd), dtype)
+    v = jax.random.normal(jax.random.key(2), (B, KV, S, hd), dtype)
+    o1 = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                block_q=64, block_k=64, interpret=True)
+    o2 = flash_attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,H,KV,L,hd", [(2, 4, 2, 128, 64), (3, 8, 2, 300, 64),
+                                         (1, 4, 4, 77, 128)])
+def test_decode_attention(B, H, KV, L, hd):
+    q = jax.random.normal(jax.random.key(3), (B, H, hd))
+    k = jax.random.normal(jax.random.key(4), (B, KV, L, hd))
+    v = jax.random.normal(jax.random.key(5), (B, KV, L, hd))
+    lens = jnp.asarray(np.random.default_rng(B).integers(1, L + 1, B))
+    o1 = decode_attention_pallas(q, k, v, lens, block_l=64, interpret=True)
+    o2 = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)

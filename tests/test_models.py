@@ -1,0 +1,130 @@
+"""Model substrate: every layer family agrees across fwd / prefill / decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models import lm
+
+BASE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+            dtype="float32", attn_chunk_q=16, attn_chunk_kv=16, ssm_chunk=8)
+
+
+def roundtrip(cfg, steps=3, **fwd_kw):
+    params = lm.init_params(cfg, jax.random.key(0))
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    logits, _ = lm.forward(cfg, params, tokens, **fwd_kw)
+    assert logits.shape == (B, S + cfg.num_prefix_embeds, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    P = cfg.num_prefix_embeds
+    logits_p, cache, pos = lm.prefill(cfg, params, tokens,
+                                      max_len=P + S + steps, **fwd_kw)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits),
+                               rtol=3e-4, atol=3e-4)
+    toks = tokens
+    logits_d = None
+    for i in range(steps):
+        src = logits_p[:, -1] if i == 0 else logits_d
+        tok = jnp.argmax(src, -1).astype(jnp.int32)
+        logits_d, cache = lm.decode_step(cfg, params, cache, tok, pos)
+        pos = pos + 1
+        toks = jnp.concatenate([toks, tok[:, None]], axis=1)
+    logits_f, _ = lm.forward(cfg, params, toks, **fwd_kw)
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(logits_f[:, -1]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_dense_gqa():
+    roundtrip(ModelConfig(name="t", family="dense", n_layers=4,
+                          pattern=(LayerSpec(),), **BASE))
+
+
+def test_qkv_bias():
+    roundtrip(ModelConfig(name="t", family="dense", n_layers=2,
+                          qkv_bias=True, pattern=(LayerSpec(),), **BASE))
+
+
+def test_mamba():
+    roundtrip(ModelConfig(name="t", family="ssm", n_layers=4,
+                          pattern=(LayerSpec(kind="mamba", ffn="none"),),
+                          **BASE))
+
+
+def test_moe():
+    roundtrip(ModelConfig(name="t", family="moe", n_layers=4, n_experts=4,
+                          top_k=2, capacity_factor=8.0, moe_chunk=0,
+                          pattern=(LayerSpec(ffn="moe"),), **BASE))
+
+
+def test_swa_ring_cache():
+    roundtrip(ModelConfig(name="t", family="dense", n_layers=4,
+                          pattern=(LayerSpec(window=16),), **BASE))
+
+
+def test_hybrid_superblock():
+    pat = (LayerSpec(kind="mamba"), LayerSpec(kind="mamba", ffn="moe"),
+           LayerSpec(kind="attn"), LayerSpec(kind="mamba", ffn="moe"))
+    roundtrip(ModelConfig(name="t", family="hybrid", n_layers=8, n_experts=4,
+                          top_k=2, capacity_factor=8.0, moe_chunk=0,
+                          pattern=pat, **BASE))
+
+
+def test_encdec():
+    cfg = ModelConfig(name="t", family="audio", n_layers=2, encoder_layers=2,
+                      encoder_len=12, norm_type="ln", pos_type="sinusoidal",
+                      mlp_type="gelu", pattern=(LayerSpec(),), **BASE)
+    enc = jax.random.normal(jax.random.key(5), (2, 12, 64), jnp.float32)
+    roundtrip(cfg, enc_frames=enc)
+
+
+def test_vlm_prefix():
+    cfg = ModelConfig(name="t", family="vlm", n_layers=2, num_prefix_embeds=4,
+                      pattern=(LayerSpec(),), **BASE)
+    pre = jax.random.normal(jax.random.key(6), (2, 4, 64), jnp.float32)
+    roundtrip(cfg, prefix_embeds=pre)
+
+
+@pytest.mark.parametrize("impl", ["chunked", "tri"])
+def test_attention_impls_match_plain(impl):
+    cfg = ModelConfig(name="t", family="dense", n_layers=2,
+                      pattern=(LayerSpec(),), **BASE)
+    params = lm.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, 256)
+    ref, _ = lm.forward(cfg.replace(attn_impl="plain"), params, tokens)
+    got, _ = lm.forward(cfg.replace(attn_impl=impl), params, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_banded_swa_matches_plain():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2,
+                      pattern=(LayerSpec(window=24),), **BASE)
+    params = lm.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, 256)
+    ref, _ = lm.forward(cfg.replace(attn_impl="plain"), params, tokens)
+    got, _ = lm.forward(cfg.replace(attn_impl="chunked", swa_banded=True),
+                        params, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_scan_vs_unrolled_layers():
+    cfg = ModelConfig(name="t", family="dense", n_layers=4,
+                      pattern=(LayerSpec(),), **BASE)
+    params = lm.init_params(cfg, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, 256)
+    a, _ = lm.forward(cfg, params, tokens)
+    b, _ = lm.forward(cfg.replace(scan_layers=False), params, tokens)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_param_count_matches_init():
+    from repro.utils.tree import tree_param_count
+    cfg = ModelConfig(name="t", family="moe", n_layers=4, n_experts=4,
+                      top_k=2, pattern=(LayerSpec(ffn="moe"),), **BASE)
+    params = lm.init_params(cfg, jax.random.key(0))
+    assert tree_param_count(params) == cfg.param_count()
