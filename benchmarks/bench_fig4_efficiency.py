@@ -34,7 +34,9 @@ def main(small: bool = False):
             emit(f"fig4/{ds_name}/{q}/{m}", us_per_call,
                  f"oracle={out['oracle_calls']};proxy={out['proxy_calls']};"
                  f"tokens={out['tokens']};redux_vs_ref={red:.1f}x;"
-                 f"acc={out['acc']:.4f};f1={out['f1']:.4f}")
+                 f"acc={out['acc']:.4f};f1={out['f1']:.4f};"
+                 f"mean_batch={out['mean_oracle_batch']:.1f};"
+                 f"invocations={out['oracle_invocations']}")
             rows.append((ds_name, q, m, out))
     return rows
 

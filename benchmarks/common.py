@@ -42,6 +42,11 @@ def run_method(table, truth, token_lens, method, flip=0.02, cfg=None,
         "weighted_calls": oracle_calls * ORACLE_COST + proxy_calls * PROXY_COST,
         "tokens": getattr(r, "input_tokens", 0) + getattr(r, "output_tokens", 0),
         "wall_s": wall,
+        # serving-side efficiency: tuples per model invocation.  The round
+        # executor submits cross-cluster round batches, so this grows from
+        # ~per-cluster sample size to the full-round aggregate.
+        "mean_oracle_batch": oracle.stats.mean_batch_size,
+        "oracle_invocations": len(oracle.stats.batch_sizes),
         "result": r,
     }
 

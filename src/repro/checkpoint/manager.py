@@ -1,10 +1,15 @@
-"""Checkpointing from scratch (no orbax offline): msgpack + zstd, atomic.
+"""Checkpointing from scratch (no orbax offline): msgpack + zstd/zlib, atomic.
 
 Layout per step:
     <dir>/step_<n>.tmp-<nonce>/   — written first
-        shard_000.msgpack.zst     — leaf payloads (chunked)
+        shard_000.msgpack.<codec> — leaf payloads (chunked)
         MANIFEST.json             — tree structure, shapes, dtypes, checksums
     <dir>/step_<n>/               — atomic rename on completion
+
+Compression: zstd when the ``zstandard`` package is importable, otherwise a
+stdlib ``zlib`` fallback.  The codec is recorded in the manifest so restores
+pick the right decompressor; requesting ``codec="zstd"`` explicitly without
+the package installed is a clear error (not a silent downgrade).
 
 Fault-tolerance properties:
 - a crash mid-write leaves only a .tmp dir (ignored on restore);
@@ -26,10 +31,55 @@ import threading
 import time
 from typing import Optional
 
+import zlib
+
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:  # optional: zstd gives better ratios, zlib keeps the module importable
+    import zstandard as zstd
+except ImportError:  # pragma: no cover - depends on the environment
+    zstd = None
+
+_SHARD_EXT = {"zstd": ".zst", "zlib": ".zlib", "none": ".raw"}
+
+
+def _default_codec() -> str:
+    return "zstd" if zstd is not None else "zlib"
+
+
+def _require_codec(codec: str):
+    """Validate a write-side codec request (fail before any file I/O)."""
+    if codec not in _SHARD_EXT:
+        raise ValueError(f"unknown checkpoint codec: {codec!r}")
+    if codec == "zstd" and zstd is None:
+        raise ModuleNotFoundError(
+            "checkpoint codec 'zstd' requested but the 'zstandard' "
+            "package is not installed; install it or use codec='zlib'")
+
+
+def _compress(blob: bytes, codec: str) -> bytes:
+    _require_codec(codec)
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(blob)
+    if codec == "zlib":
+        return zlib.compress(blob, level=6)
+    return blob
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed; install it to restore")
+        return zstd.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    if codec == "none":
+        return blob
+    raise ValueError(f"unknown checkpoint codec: {codec!r}")
 
 
 def _flatten_with_paths(tree):
@@ -41,15 +91,17 @@ def _flatten_with_paths(tree):
     return out, treedef
 
 
-def save_pytree(tree, path: pathlib.Path, extra_meta: dict = None):
+def save_pytree(tree, path: pathlib.Path, extra_meta: dict = None,
+                codec: Optional[str] = None):
     path = pathlib.Path(path)
+    codec = codec or _default_codec()
+    _require_codec(codec)  # fail before the tmp dir is created
     tmp = path.with_name(path.name + f".tmp-{os.getpid()}-{int(time.time()*1e3)}")
     tmp.mkdir(parents=True, exist_ok=False)
-    cctx = zstd.ZstdCompressor(level=3)
     flat, _ = _flatten_with_paths(tree)
     manifest = {"leaves": [], "extra": extra_meta or {},
-                "created": time.time()}
-    shard_path = tmp / "shard_000.msgpack.zst"
+                "created": time.time(), "codec": codec}
+    shard_path = tmp / ("shard_000.msgpack" + _SHARD_EXT[codec])
     records = []
     for key, leaf in flat:
         arr = np.asarray(leaf)
@@ -59,7 +111,7 @@ def save_pytree(tree, path: pathlib.Path, extra_meta: dict = None):
         manifest["leaves"].append({
             "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "sha1": hashlib.sha1(payload).hexdigest()})
-    blob = cctx.compress(msgpack.packb(records, use_bin_type=True))
+    blob = _compress(msgpack.packb(records, use_bin_type=True), codec)
     shard_path.write_bytes(blob)
     (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
     if path.exists():
@@ -72,10 +124,12 @@ def load_pytree(path: pathlib.Path, template=None, shardings=None,
     """Restore; optionally re-shard with a shardings tree (elastic restore)."""
     path = pathlib.Path(path)
     manifest = json.loads((path / "MANIFEST.json").read_text())
-    dctx = zstd.ZstdDecompressor()
-    records = msgpack.unpackb(
-        dctx.decompress((path / "shard_000.msgpack.zst").read_bytes()),
-        raw=False)
+    codec = manifest.get("codec", "zstd")  # pre-codec checkpoints were zstd
+    if codec not in _SHARD_EXT:
+        raise ValueError(f"unknown checkpoint codec: {codec!r}")
+    shard = path / ("shard_000.msgpack" + _SHARD_EXT[codec])
+    records = msgpack.unpackb(_decompress(shard.read_bytes(), codec),
+                              raw=False)
     by_key = {}
     for rec, meta in zip(records, manifest["leaves"]):
         if verify:

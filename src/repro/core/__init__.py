@@ -10,9 +10,12 @@ from repro.core.theory import (xi_for_epsilon_univote, xi_for_epsilon_simvote,
                                vote_error_bound, epsilon_for_xi,
                                bernstein_tail, choose_sample_size)
 from repro.core.clustering import kmeans, kmeans_predict, minibatch_kmeans_update
-from repro.core.voting import uni_vote, sim_vote
-from repro.core.csv_filter import CSVConfig, FilterResult, semantic_filter
+from repro.core.voting import (uni_vote, sim_vote, uni_vote_batch,
+                               sim_vote_batch)
+from repro.core.csv_filter import (CSVConfig, FilterResult, RoundPlan,
+                                   RoundResult, plan_round, semantic_filter)
 from repro.core.oracle import (SyntheticOracle, ModelOracle, OracleStats,
-                               ProxyModel)
+                               ProxyModel, SyncOracleDispatcher,
+                               AsyncOracleDispatcher)
 from repro.core.baselines import reference_filter, lotus_filter, bargain_filter
 from repro.core.operators import SemanticTable

@@ -5,6 +5,27 @@ around device-side batched math (k-means assignment, voting kernels) and
 batched oracle invocations.  The driver is *restartable*: its state is the
 oracle memo plus the deterministic RNG seed, so a preempted run resumes by
 replaying decisions against cached LLM calls (no re-invocation).
+
+Two executors share the same decision semantics (bit-identical masks and
+call counts under a fixed seed — see tests/test_round_executor.py):
+
+- ``executor="round"`` (default): a round-vectorized pipeline
+  plan → sample → oracle → vote → partition.  Within each re-clustering
+  round the sample ids of ALL live clusters are gathered into a single
+  cross-cluster oracle call (one large prompt batch that actually fills the
+  serving engine's buckets) and voting for all clusters runs in one
+  segmented device dispatch.  ``pipeline_depth > 1`` splits a round into
+  that many waves and submits wave k+1's oracle batch (async, strict FIFO)
+  before voting wave k — oracle prefill overlaps device voting.
+- ``executor="sequential"``: the original one-cluster-at-a-time loop, kept
+  as the regression baseline.
+
+Bit-identity argument: the planner draws each cluster's sample with the same
+``rng.choice`` in the same cluster order as the sequential loop (the driver
+RNG and the oracle's flip RNG are separate streams), and a numpy Generator
+produces the same values whether drawn as one batch or consecutively —
+so the concatenated oracle batch consumes the flip stream exactly as C
+per-cluster calls would.
 """
 from __future__ import annotations
 
@@ -18,7 +39,9 @@ import numpy as np
 
 from repro.core import theory
 from repro.core.clustering import kmeans
-from repro.core.voting import sim_vote, uni_vote
+from repro.core.oracle import AsyncOracleDispatcher, SyncOracleDispatcher
+from repro.core.voting import (sim_vote, sim_vote_batch, uni_vote,
+                               uni_vote_batch)
 
 
 @dataclasses.dataclass
@@ -36,6 +59,9 @@ class CSVConfig:
     sim_bandwidth: Optional[float] = None
     kmeans_iters: int = 50
     seed: int = 0
+    executor: str = "round"  # "round" | "sequential"
+    pipeline_depth: int = 1  # oracle waves per round (>1 overlaps prefill
+    #                          of the next wave with voting of the current)
 
     @property
     def ub_(self) -> float:
@@ -46,7 +72,7 @@ class CSVConfig:
 class FilterResult:
     mask: np.ndarray  # (N,) bool — tuples passing the filter
     n_llm_calls: int
-    input_tokens: int
+    input_tokens: int  # delta for THIS run (oracle may be shared/reused)
     output_tokens: int
     n_voted: int  # tuples decided by voting (no LLM call)
     n_fallback: int  # tuples decided by the final linear fallback
@@ -55,56 +81,202 @@ class FilterResult:
     total_time_s: float
     cluster_log: list  # per-cluster (size, sample, score stats) records
     xi_used: float
+    round_log: list = dataclasses.field(default_factory=list)
+    oracle_batch_sizes: list = dataclasses.field(default_factory=list)
 
 
-def _derive_xi(cfg: CSVConfig, sigma2: float) -> float:
-    if cfg.epsilon is None:
-        return cfg.xi
+# ---------------------------------------------------------------- round plan
+@dataclasses.dataclass
+class ClusterPlan:
+    ids: np.ndarray         # global tuple ids of the cluster
+    sample_ids: np.ndarray  # ids submitted to the oracle
+    rest_ids: np.ndarray    # ids decided by voting
+    size: int
+    n_sample: int
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    depth: int
+    clusters: list
+
+    @property
+    def n_sampled(self) -> int:
+        return int(sum(c.n_sample for c in self.clusters))
+
+
+@dataclasses.dataclass
+class RoundResult:
+    depth: int
+    n_clusters: int
+    n_sampled: int
+    n_voted: int
+    n_undetermined: int
+    waves: int
+    oracle_batches: list  # submitted batch size per wave
+
+
+def plan_round(queue: list, rng: np.random.Generator, xi: float,
+               cfg: CSVConfig, depth: int) -> RoundPlan:
+    """Draw every cluster's sample (same RNG order as the sequential loop)."""
+    clusters = []
+    for cluster in queue:
+        m = len(cluster)
+        n_sample = theory.choose_sample_size(m, xi, cfg.min_sample)
+        sample_local = rng.choice(m, size=n_sample, replace=False)
+        rest_mask = np.ones(m, dtype=bool)
+        rest_mask[sample_local] = False
+        clusters.append(ClusterPlan(
+            ids=cluster, sample_ids=cluster[sample_local],
+            rest_ids=cluster[rest_mask], size=m, n_sample=n_sample))
+    return RoundPlan(depth=depth, clusters=clusters)
+
+
+def _vote_wave(wave: list, labels_by_cluster: list, emb: np.ndarray,
+               cfg: CSVConfig, lb: float, ub: float):
+    """One segmented voting dispatch for every non-exhausted wave cluster."""
+    live = [i for i, cp in enumerate(wave) if len(cp.rest_ids)]
+    if not live:
+        return {}
     if cfg.vote == "sim":
-        return theory.xi_for_epsilon_simvote(cfg.epsilon, sigma2, cfg.theory_l,
-                                             cfg.sim_v)
-    return theory.xi_for_epsilon_univote(cfg.epsilon, sigma2, cfg.theory_l)
-
-
-def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
-                    precomputed_assign: Optional[np.ndarray] = None
-                    ) -> FilterResult:
-    """Run CSV over a table represented by its tuple embeddings.
-
-    embeddings: (N, D) — generated offline (paper phase 1).
-    oracle: callable(ids)->bool array with .stats (see repro.core.oracle).
-    """
-    cfg = cfg or CSVConfig()
-    t0 = time.time()
-    rng = np.random.default_rng(cfg.seed)
-    n = embeddings.shape[0]
-    emb = np.asarray(embeddings, dtype=np.float32)
-    result = np.zeros(n, dtype=bool)
-    decided = np.zeros(n, dtype=bool)
-    calls_before = oracle.stats.n_calls
-    lb, ub = cfg.lb, cfg.ub_
-    xi = _derive_xi(cfg, sigma2=0.25)  # worst-case sigma before seeing data
-    cluster_log = []
-    recluster_time = 0.0
-    n_voted = 0
-    n_fallback = 0
-    rounds_used = 0
-
-    # ---- initial clustering (offline phase; query-agnostic) ----
-    if precomputed_assign is not None:
-        assign = np.asarray(precomputed_assign)
+        votes = sim_vote_batch(
+            [emb[wave[i].rest_ids] for i in live],
+            [emb[wave[i].sample_ids] for i in live],
+            [labels_by_cluster[i].astype(np.float32) for i in live],
+            lb, ub, cfg.sim_bandwidth)
     else:
-        key = jax.random.key(cfg.seed)
-        _, assign, _ = kmeans(key, jnp.asarray(emb), cfg.n_clusters,
+        votes = uni_vote_batch(
+            [labels_by_cluster[i].astype(np.float32) for i in live],
+            [len(wave[i].rest_ids) for i in live], lb, ub)
+    return dict(zip(live, votes))
+
+
+def _recluster_or_fallback(emb, oracle, cfg, pending, depth, result, decided):
+    """Shared round tail: route undetermined tuples to the linear fallback
+    or a k-means re-split.  Both executors MUST share this — the
+    bit-identity contract depends on identical key/fallback derivation.
+    Returns (next_queue, n_fallback_added, recluster_seconds)."""
+    if depth > cfg.max_recluster:
+        # final fallback: direct LLM evaluation (bounded error by design)
+        labels = oracle(pending)
+        result[pending] = labels
+        decided[pending] = True
+        return [], len(pending), 0.0
+    t_rc = time.time()
+    key = jax.random.key(cfg.seed + depth)
+    k = min(cfg.n_clusters, len(pending))
+    if len(pending) <= cfg.min_sample:
+        labels = oracle(pending)
+        result[pending] = labels
+        decided[pending] = True
+        return [], len(pending), time.time() - t_rc
+    _, sub_assign, _ = kmeans(key, jnp.asarray(emb[pending]), k,
                               max_iters=cfg.kmeans_iters)
-        assign = np.asarray(assign)
+    sub_assign = np.asarray(sub_assign)
+    queue = [pending[sub_assign == c] for c in range(k)]
+    return [c for c in queue if len(c)], 0, time.time() - t_rc
 
-    queue = [np.nonzero(assign == c)[0] for c in range(int(assign.max()) + 1)]
-    queue = [c for c in queue if len(c)]
 
+def _run_round_executor(emb, oracle, cfg, rng, xi, result, decided,
+                        cluster_log, round_log, queue):
+    """plan → sample → oracle → vote → partition, one round per iteration."""
+    lb, ub = cfg.lb, cfg.ub_
+    n_voted = n_fallback = 0
+    rounds_used = 0
+    recluster_time = 0.0
     depth = 0
     while queue and depth <= cfg.max_recluster:
-        undetermined: list[np.ndarray] = []
+        plan = plan_round(queue, rng, xi, cfg, depth)
+        n_waves = max(1, min(int(cfg.pipeline_depth), len(plan.clusters)))
+        bounds = np.linspace(0, len(plan.clusters), n_waves + 1).astype(int)
+        waves = [plan.clusters[bounds[k]:bounds[k + 1]]
+                 for k in range(n_waves)]
+        waves = [w for w in waves if w]
+
+        dispatcher = (AsyncOracleDispatcher(oracle) if len(waves) > 1
+                      else SyncOracleDispatcher(oracle))
+        handles = [dispatcher.submit(
+            np.concatenate([cp.sample_ids for cp in waves[0]]))]
+        undetermined = []
+        round_voted = 0
+        oracle_batches = []
+        try:
+            for k, wave in enumerate(waves):
+                if k + 1 < len(waves):
+                    # overlap: next wave's oracle prefill starts before this
+                    # wave's voting touches the device
+                    handles.append(dispatcher.submit(
+                        np.concatenate([cp.sample_ids
+                                        for cp in waves[k + 1]])))
+                flat_labels = handles[k].result()
+                oracle_batches.append(int(len(flat_labels)))
+                offsets = np.cumsum([cp.n_sample for cp in wave])[:-1]
+                labels_by_cluster = np.split(flat_labels, offsets)
+
+                for cp, labels in zip(wave, labels_by_cluster):
+                    result[cp.sample_ids] = labels
+                    decided[cp.sample_ids] = True
+
+                votes = _vote_wave(wave, labels_by_cluster, emb, cfg, lb, ub)
+                for i, cp in enumerate(wave):
+                    labels = labels_by_cluster[i]
+                    if len(cp.rest_ids) == 0:
+                        cluster_log.append({
+                            "size": cp.size, "sampled": cp.n_sample,
+                            "score": float(np.mean(labels)),
+                            "depth": depth, "outcome": "exhausted"})
+                        continue
+                    vr = votes[i]
+                    result[cp.rest_ids[vr.decided_true]] = True
+                    decided[cp.rest_ids[vr.decided_true]] = True
+                    result[cp.rest_ids[vr.decided_false]] = False
+                    decided[cp.rest_ids[vr.decided_false]] = True
+                    voted = len(vr.decided_true) + len(vr.decided_false)
+                    n_voted += voted
+                    round_voted += voted
+                    if len(vr.undetermined):
+                        undetermined.append(cp.rest_ids[vr.undetermined])
+                    cluster_log.append({
+                        "size": cp.size, "sampled": cp.n_sample,
+                        "score": float(np.mean(labels)),
+                        "voted": int(voted),
+                        "undetermined": int(len(vr.undetermined)),
+                        "depth": depth,
+                        "outcome": ("vote" if not len(vr.undetermined)
+                                    else "recluster"),
+                    })
+        finally:
+            dispatcher.close()
+
+        n_undet = int(sum(len(u) for u in undetermined))
+        round_log.append(RoundResult(
+            depth=depth, n_clusters=len(plan.clusters),
+            n_sampled=plan.n_sampled, n_voted=round_voted,
+            n_undetermined=n_undet, waves=len(waves),
+            oracle_batches=oracle_batches))
+
+        if not undetermined:
+            break
+        pending = np.concatenate(undetermined)
+        depth += 1
+        rounds_used = depth
+        queue, fb, dt = _recluster_or_fallback(emb, oracle, cfg, pending,
+                                               depth, result, decided)
+        n_fallback += fb
+        recluster_time += dt
+    return n_voted, n_fallback, rounds_used, recluster_time
+
+
+def _run_sequential_executor(emb, oracle, cfg, rng, xi, result, decided,
+                             cluster_log, round_log, queue):
+    """The pre-refactor cluster-at-a-time loop (regression baseline)."""
+    lb, ub = cfg.lb, cfg.ub_
+    n_voted = n_fallback = 0
+    rounds_used = 0
+    recluster_time = 0.0
+    depth = 0
+    while queue and depth <= cfg.max_recluster:
+        undetermined = []
         for cluster in queue:
             m = len(cluster)
             n_sample = theory.choose_sample_size(m, xi, cfg.min_sample)
@@ -151,38 +323,70 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         pending = np.concatenate(undetermined)
         depth += 1
         rounds_used = depth
-        if depth > cfg.max_recluster:
-            # final fallback: direct LLM evaluation (bounded error by design)
-            labels = oracle(pending)
-            result[pending] = labels
-            decided[pending] = True
-            n_fallback += len(pending)
-            queue = []
-        else:
-            t_rc = time.time()
-            key = jax.random.key(cfg.seed + depth)
-            k = min(cfg.n_clusters, len(pending))
-            if len(pending) <= cfg.min_sample:
-                labels = oracle(pending)
-                result[pending] = labels
-                decided[pending] = True
-                n_fallback += len(pending)
-                queue = []
-            else:
-                _, sub_assign, _ = kmeans(key, jnp.asarray(emb[pending]), k,
-                                          max_iters=cfg.kmeans_iters)
-                sub_assign = np.asarray(sub_assign)
-                queue = [pending[sub_assign == c] for c in range(k)]
-                queue = [c for c in queue if len(c)]
-            recluster_time += time.time() - t_rc
+        queue, fb, dt = _recluster_or_fallback(emb, oracle, cfg, pending,
+                                               depth, result, decided)
+        n_fallback += fb
+        recluster_time += dt
+    return n_voted, n_fallback, rounds_used, recluster_time
+
+
+def _derive_xi(cfg: CSVConfig, sigma2: float) -> float:
+    if cfg.epsilon is None:
+        return cfg.xi
+    if cfg.vote == "sim":
+        return theory.xi_for_epsilon_simvote(cfg.epsilon, sigma2, cfg.theory_l,
+                                             cfg.sim_v)
+    return theory.xi_for_epsilon_univote(cfg.epsilon, sigma2, cfg.theory_l)
+
+
+def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
+                    precomputed_assign: Optional[np.ndarray] = None
+                    ) -> FilterResult:
+    """Run CSV over a table represented by its tuple embeddings.
+
+    embeddings: (N, D) — generated offline (paper phase 1).
+    oracle: callable(ids)->bool array with .stats (see repro.core.oracle).
+    """
+    cfg = cfg or CSVConfig()
+    if cfg.executor not in ("round", "sequential"):
+        raise ValueError(f"unknown executor {cfg.executor!r}; "
+                         "expected 'round' or 'sequential'")
+    t0 = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    n = embeddings.shape[0]
+    emb = np.asarray(embeddings, dtype=np.float32)
+    result = np.zeros(n, dtype=bool)
+    decided = np.zeros(n, dtype=bool)
+    stats_before = oracle.stats.clone()
+    xi = _derive_xi(cfg, sigma2=0.25)  # worst-case sigma before seeing data
+    cluster_log: list = []
+    round_log: list = []
+
+    # ---- initial clustering (offline phase; query-agnostic) ----
+    if precomputed_assign is not None:
+        assign = np.asarray(precomputed_assign)
+    else:
+        key = jax.random.key(cfg.seed)
+        _, assign, _ = kmeans(key, jnp.asarray(emb), cfg.n_clusters,
+                              max_iters=cfg.kmeans_iters)
+        assign = np.asarray(assign)
+
+    queue = [np.nonzero(assign == c)[0] for c in range(int(assign.max()) + 1)]
+    queue = [c for c in queue if len(c)]
+
+    run = (_run_sequential_executor if cfg.executor == "sequential"
+           else _run_round_executor)
+    n_voted, n_fallback, rounds_used, recluster_time = run(
+        emb, oracle, cfg, rng, xi, result, decided, cluster_log, round_log,
+        queue)
 
     assert decided.all(), "driver must decide every tuple"
-    st = oracle.stats
+    delta = oracle.stats.delta(stats_before)
     return FilterResult(
         mask=result,
-        n_llm_calls=st.n_calls - calls_before,
-        input_tokens=st.input_tokens,
-        output_tokens=st.output_tokens,
+        n_llm_calls=delta.n_calls,
+        input_tokens=delta.input_tokens,
+        output_tokens=delta.output_tokens,
         n_voted=n_voted,
         n_fallback=n_fallback,
         recluster_rounds=rounds_used,
@@ -190,4 +394,6 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         total_time_s=time.time() - t0,
         cluster_log=cluster_log,
         xi_used=xi,
+        round_log=round_log,
+        oracle_batch_sizes=delta.batch_sizes,
     )

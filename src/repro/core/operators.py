@@ -54,11 +54,18 @@ class SemanticTable:
 
     def sem_filter(self, oracle, method: str = "csv",
                    cfg: Optional[CSVConfig] = None, proxy=None,
-                   reuse_clustering: bool = True, **kw):
+                   reuse_clustering: bool = True,
+                   executor: Optional[str] = None,
+                   pipeline_depth: Optional[int] = None, **kw):
         """Evaluate a semantic predicate.
 
         method: "csv" (UniVote), "csv-sim" (SimVote), "reference",
                 "lotus", "bargain".
+        executor / pipeline_depth: physical-plan knobs forwarded to
+        ``CSVConfig`` — "round" (default) batches every live cluster's
+        sample into one oracle call per round and votes all clusters in one
+        segmented dispatch; pipeline_depth > 1 overlaps oracle prefill of
+        the next wave with voting of the current one.
         """
         n = len(self)
         if method == "reference":
@@ -72,6 +79,13 @@ class SemanticTable:
         cfg = cfg or CSVConfig()
         if method == "csv-sim":
             cfg = dataclasses.replace(cfg, vote="sim")
+        overrides = {}
+        if executor is not None:
+            overrides["executor"] = executor
+        if pipeline_depth is not None:
+            overrides["pipeline_depth"] = pipeline_depth
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
         assign = (self.precluster(cfg.n_clusters, cfg.seed)
                   if reuse_clustering else None)
         return semantic_filter(self.embeddings, oracle, cfg,

@@ -15,6 +15,7 @@ the CSV driver restartable (fault tolerance).
 from __future__ import annotations
 
 import dataclasses
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -26,9 +27,27 @@ class OracleStats:
     n_cached: int = 0
     input_tokens: int = 0
     output_tokens: int = 0
+    # size of every *evaluated* batch (memo hits excluded) — the round
+    # executor's key efficiency signal: one entry per model invocation
+    batch_sizes: list = dataclasses.field(default_factory=list)
 
     def clone(self):
-        return dataclasses.replace(self)
+        return dataclasses.replace(self, batch_sizes=list(self.batch_sizes))
+
+    def delta(self, before: "OracleStats") -> "OracleStats":
+        """Accounting attributable to work since ``before`` (a clone)."""
+        return OracleStats(
+            n_calls=self.n_calls - before.n_calls,
+            n_cached=self.n_cached - before.n_cached,
+            input_tokens=self.input_tokens - before.input_tokens,
+            output_tokens=self.output_tokens - before.output_tokens,
+            batch_sizes=self.batch_sizes[len(before.batch_sizes):],
+        )
+
+    @property
+    def mean_batch_size(self) -> float:
+        return (float(np.mean(self.batch_sizes))
+                if self.batch_sizes else 0.0)
 
 
 class BaseOracle:
@@ -64,6 +83,7 @@ class BaseOracle:
             self.stats.n_calls += len(missing)
             self.stats.input_tokens += self._tokens_of(mids)
             self.stats.output_tokens += len(missing)  # 1 decision token each
+            self.stats.batch_sizes.append(len(missing))
         return out
 
     # --- persistence (fault tolerance / §3.1 update cache) ---
@@ -162,3 +182,43 @@ class ModelOracle(BaseOracle):
 
     def _tokens_of(self, ids):
         return int(sum(len(self._prompt_ids(int(i))) for i in ids))
+
+
+# --------------------------------------------------------------------------
+# Round dispatch: the executor submits one cross-cluster batch per wave and
+# collects the labels later, so oracle prefill for wave k+1 can overlap the
+# device voting of wave k (``pipeline_depth`` > 1 in the CSV driver).
+# Both dispatchers return a concurrent.futures.Future.
+# --------------------------------------------------------------------------
+class SyncOracleDispatcher:
+    """Evaluates at submit time — the zero-overlap default (depth 1)."""
+
+    def __init__(self, oracle):
+        self.oracle = oracle
+
+    def submit(self, ids) -> Future:
+        f = Future()
+        try:
+            f.set_result(self.oracle(ids))
+        except BaseException as e:  # propagate at result()
+            f.set_exception(e)
+        return f
+
+    def close(self):
+        pass
+
+
+class AsyncOracleDispatcher:
+    """Single worker thread, strict FIFO: batches are evaluated in submission
+    order, so memoization and any stateful oracle RNG (SyntheticOracle's flip
+    stream) behave bit-identically to synchronous dispatch."""
+
+    def __init__(self, oracle):
+        self.oracle = oracle
+        self._pool = ThreadPoolExecutor(max_workers=1)
+
+    def submit(self, ids) -> Future:
+        return self._pool.submit(self.oracle, np.asarray(ids))
+
+    def close(self):
+        self._pool.shutdown(wait=True)

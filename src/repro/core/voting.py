@@ -9,16 +9,21 @@ Similarity: Gaussian kernel sim(ei,ej) = exp(-||ei-ej||^2 / (2 tau^2)) with
 a self-tuning bandwidth (median sampled-pair distance) unless given.  The
 paper leaves sim() unspecified; a monotone-decreasing function of L2
 distance matches its Fig. 2 analysis.
+
+Batch entry points (``uni_vote_batch`` / ``sim_vote_batch``) vote ALL
+clusters of a re-clustering round at once: one segmented device dispatch for
+SimVote, one vectorized reduction for UniVote, with decisions identical to
+the per-cluster calls.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.simvote.ops import simvote_scores
+from repro.kernels.simvote.ops import simvote_scores, simvote_scores_segmented
 
 
 @dataclasses.dataclass
@@ -29,17 +34,46 @@ class VoteResult:
     scores: np.ndarray  # per unsampled tuple (SimVote) or scalar (UniVote)
 
 
+def _partition_by_score(scores: np.ndarray, lb: float, ub: float
+                        ) -> VoteResult:
+    idx = np.arange(len(scores))
+    return VoteResult(idx[scores >= ub], idx[scores <= lb],
+                      idx[(scores > lb) & (scores < ub)], scores)
+
+
 def uni_vote(sample_labels: np.ndarray, n_unsampled: int, lb: float,
              ub: float) -> VoteResult:
-    """Algorithm 2: every unsampled tuple gets the same cluster-level vote."""
-    score = float(np.mean(sample_labels)) if len(sample_labels) else 0.0
+    """Algorithm 2: every unsampled tuple gets the same cluster-level vote.
+
+    An empty sample carries no evidence: everything is undetermined (a 0.0
+    default score would silently vote False whenever lb >= 0).
+    """
     idx = np.arange(n_unsampled)
     empty = np.array([], dtype=np.int64)
+    if len(sample_labels) == 0:
+        return VoteResult(empty, empty, idx, np.full(n_unsampled, np.nan))
+    score = float(np.mean(sample_labels))
     if score >= ub:
         return VoteResult(idx, empty, empty, np.full(n_unsampled, score))
     if score <= lb:
         return VoteResult(empty, idx, empty, np.full(n_unsampled, score))
     return VoteResult(empty, empty, idx, np.full(n_unsampled, score))
+
+
+def uni_vote_batch(sample_labels: Sequence[np.ndarray],
+                   n_unsampled: Sequence[int], lb: float, ub: float
+                   ) -> list[VoteResult]:
+    """Algorithm 2 over every cluster of a round in one call.
+
+    ``sample_labels[c]`` votes for ``n_unsampled[c]`` tuples.  Each cluster's
+    score is computed by the exact ``uni_vote`` expression — UniVote has no
+    device work to batch (one scalar mean per cluster), and reproducing
+    ``np.mean``'s input-dtype arithmetic is what keeps round-executor
+    decisions bit-identical to the sequential driver even when a score lands
+    exactly on a threshold (float32 1/10 != float64 1/10).
+    """
+    return [uni_vote(np.asarray(s), int(n_c), lb, ub)
+            for s, n_c in zip(sample_labels, n_unsampled)]
 
 
 def default_bandwidth(emb_sampled: np.ndarray) -> float:
@@ -56,19 +90,74 @@ def default_bandwidth(emb_sampled: np.ndarray) -> float:
 def sim_vote(emb_unsampled: np.ndarray, emb_sampled: np.ndarray,
              sample_labels: np.ndarray, lb: float, ub: float,
              bandwidth: Optional[float] = None) -> VoteResult:
-    """Algorithm 3: per-tuple similarity-weighted voting."""
+    """Algorithm 3: per-tuple similarity-weighted voting.
+
+    As with ``uni_vote``, an empty sample carries no evidence — everything
+    is undetermined (a zero denominator would otherwise score 0.0 and
+    silently vote False whenever lb >= 0).
+    """
     n = emb_unsampled.shape[0]
     idx = np.arange(n)
     empty = np.array([], dtype=np.int64)
     if n == 0:
         z = np.zeros(0)
         return VoteResult(empty, empty, empty, z)
+    if len(sample_labels) == 0:
+        return VoteResult(empty, empty, idx, np.full(n, np.nan))
     tau = bandwidth or default_bandwidth(emb_sampled)
     scores = np.asarray(simvote_scores(
         jnp.asarray(emb_unsampled, jnp.float32),
         jnp.asarray(emb_sampled, jnp.float32),
         jnp.asarray(sample_labels, jnp.float32), tau))
-    dec_t = idx[scores >= ub]
-    dec_f = idx[scores <= lb]
-    und = idx[(scores > lb) & (scores < ub)]
-    return VoteResult(dec_t, dec_f, und, scores)
+    return _partition_by_score(scores, lb, ub)
+
+
+def sim_vote_batch(emb_unsampled: Sequence[np.ndarray],
+                   emb_sampled: Sequence[np.ndarray],
+                   sample_labels: Sequence[np.ndarray], lb: float, ub: float,
+                   bandwidth: Optional[float] = None) -> list[VoteResult]:
+    """Algorithm 3 for every cluster of a round in ONE device dispatch.
+
+    Per-cluster (x_c, s_c, y_c) ragged inputs are packed into a padded
+    (C, max_m, D) sample tensor plus a concatenated unsampled matrix and
+    scored by the segmented simvote kernel; bandwidths stay per-cluster
+    (``default_bandwidth`` of each cluster's own sample, matching the
+    sequential path).
+    """
+    c = len(emb_unsampled)
+    counts = np.array([len(x) for x in emb_unsampled], np.int64)
+    out: list[Optional[VoteResult]] = [None] * c
+    empty = np.array([], dtype=np.int64)
+    # clusters with no unsampled rows have nothing to vote on; clusters with
+    # an empty sample have no evidence (undetermined, matching sim_vote)
+    live = [ci for ci in range(c)
+            if counts[ci] > 0 and len(sample_labels[ci]) > 0]
+    for ci in range(c):
+        if counts[ci] == 0:
+            out[ci] = VoteResult(empty, empty, empty, np.zeros(0))
+        elif len(sample_labels[ci]) == 0:
+            out[ci] = VoteResult(empty, empty, np.arange(counts[ci]),
+                                 np.full(int(counts[ci]), np.nan))
+    if not live:
+        return out  # type: ignore[return-value]
+
+    d = np.asarray(emb_unsampled[live[0]]).shape[1]
+    max_m = max(len(emb_sampled[ci]) for ci in live)
+    s_pad = np.zeros((len(live), max_m, d), np.float32)
+    y_pad = -np.ones((len(live), max_m), np.float32)
+    taus = np.empty(len(live), np.float64)
+    for r, ci in enumerate(live):
+        m_c = len(emb_sampled[ci])
+        s_pad[r, :m_c] = emb_sampled[ci]
+        y_pad[r, :m_c] = sample_labels[ci]
+        taus[r] = bandwidth or default_bandwidth(np.asarray(emb_sampled[ci]))
+    x_all = np.concatenate([np.asarray(emb_unsampled[ci], np.float32)
+                            for ci in live])
+    scores_all = np.asarray(simvote_scores_segmented(
+        jnp.asarray(x_all), counts[live], jnp.asarray(s_pad),
+        jnp.asarray(y_pad), taus))
+    stop = np.cumsum(counts[live])
+    for r, ci in enumerate(live):
+        seg = scores_all[stop[r] - counts[ci]:stop[r]]
+        out[ci] = _partition_by_score(seg, lb, ub)
+    return out  # type: ignore[return-value]

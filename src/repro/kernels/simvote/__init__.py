@@ -1,1 +1,1 @@
-from repro.kernels.simvote.ops import simvote_scores
+from repro.kernels.simvote.ops import simvote_scores, simvote_scores_segmented

@@ -1,13 +1,26 @@
-"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+"""jit'd wrappers: Pallas on TPU, jnp reference elsewhere."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.simvote.kernel import simvote_scores_pallas
-from repro.kernels.simvote.ref import simvote_scores_ref
+from repro.kernels.simvote.kernel import (simvote_scores_pallas,
+                                          simvote_scores_segmented_pallas)
+from repro.kernels.simvote.ref import (simvote_scores_ref,
+                                       simvote_scores_segmented_ref)
 
 
 def simvote_scores(x, s, y, tau):
     if jax.default_backend() == "tpu":
         return simvote_scores_pallas(x, s, y, tau)
     return simvote_scores_ref(x, s, y, float(tau))
+
+
+def simvote_scores_segmented(x, counts, s_pad, y_pad, taus):
+    """Segmented (per-cluster) scoring for a whole round in one dispatch.
+
+    See ``simvote_scores_segmented_ref`` for the argument contract; on TPU the
+    streamed Pallas kernel avoids materializing the (N x C*M) weight matrix.
+    """
+    if jax.default_backend() == "tpu":
+        return simvote_scores_segmented_pallas(x, counts, s_pad, y_pad, taus)
+    return simvote_scores_segmented_ref(x, counts, s_pad, y_pad, taus)

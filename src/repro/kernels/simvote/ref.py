@@ -1,7 +1,8 @@
-"""Pure-jnp oracle for SimVote scoring (paper Eq. 4)."""
+"""Pure-jnp oracle for SimVote scoring (paper Eq. 4), plain and segmented."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def simvote_scores_ref(x, s, y, tau: float):
@@ -16,3 +17,37 @@ def simvote_scores_ref(x, s, y, tau: float):
     num = w @ y.astype(jnp.float32)
     den = jnp.sum(w, axis=-1)
     return num / jnp.maximum(den, 1e-30)
+
+
+def simvote_scores_segmented_ref(x, counts, s_pad, y_pad, taus):
+    """Segmented SimVote scoring over all clusters of a round.
+
+    x       (N, D)   unsampled rows, grouped by cluster (counts[c] rows each)
+    counts  (C,)     host ints — rows of x belonging to each cluster
+    s_pad   (C, M, D) per-cluster samples, zero-padded along M
+    y_pad   (C, M)   labels in {0, 1}; -1 marks M-padding
+    taus    (C,)     per-cluster Gaussian bandwidth
+    -> scores (N,)
+
+    Reference semantics = C independent ``simvote_scores_ref`` calls on each
+    cluster's own (unpadded) slice, bit-identical to the sequential driver's
+    per-cluster scoring and O(sum N_c*M_c) work/memory.  The single-launch
+    version of this contract is the Pallas kernel
+    (``simvote_scores_segmented_pallas``); a one-shot block-diagonally
+    masked jnp formulation would burn C times the FLOPs and materialize an
+    (N x C*M) weight matrix for no dispatch win on CPU.
+    """
+    counts = np.asarray(counts, np.int64)
+    taus = np.asarray(taus, np.float64)
+    out, start = [], 0
+    for ci, n_c in enumerate(counts):
+        if n_c == 0:
+            continue
+        m_c = int(np.sum(np.asarray(y_pad[ci]) >= 0.0))
+        out.append(simvote_scores_ref(x[start:start + n_c],
+                                      s_pad[ci, :m_c], y_pad[ci, :m_c],
+                                      float(taus[ci])))
+        start += int(n_c)
+    if not out:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate(out)

@@ -24,6 +24,21 @@ class BucketBatcher:
         self.pad_id = pad_id
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        # cumulative planning stats: how well callers fill the buckets.
+        # The CSV round executor exists to push fill_ratio toward 1.0 —
+        # cross-cluster batches arrive max_batch-sized instead of per-cluster
+        # trickles; benchmarks and the round planner read these numbers.
+        self.stats = {"plans": 0, "prompts": 0, "batches": 0,
+                      "padded_tokens": 0, "real_tokens": 0}
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.stats["prompts"] / max(1, self.stats["batches"])
+
+    @property
+    def fill_ratio(self) -> float:
+        """Fraction of padded (batch x bucket_len) slots holding real tokens."""
+        return self.stats["real_tokens"] / max(1, self.stats["padded_tokens"])
 
     def plan(self, prompts: Sequence[List[int]]
              ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
@@ -43,5 +58,10 @@ class BucketBatcher:
                 toks[r, :len(p)] = p
                 lens[r] = len(p)
             batches.append((idx, toks, lens))
+            self.stats["batches"] += 1
+            self.stats["padded_tokens"] += len(idx) * L
+            self.stats["real_tokens"] += int(lens.sum())
             i = j
+        self.stats["plans"] += 1
+        self.stats["prompts"] += len(prompts)
         return batches

@@ -27,7 +27,19 @@ class ServingEngine:
         self.batcher = BucketBatcher(max_batch=max_batch, pad_id=pad_id)
         self._prefill_cache = {}
         self._decode_fn = None
-        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0}
+        # batch_sizes keeps only a recent window (debug visibility); the
+        # mean uses O(1) cumulative counters so a long-running server never
+        # grows without bound
+        self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0,
+                      "batched_prompts": 0, "batch_sizes": []}
+    _BATCH_SIZE_WINDOW = 1024
+
+    @property
+    def mean_batch_size(self) -> float:
+        """Mean prompts per compiled-program invocation — grows toward
+        ``max_batch`` when callers (the CSV round executor) submit
+        cross-cluster round batches instead of per-cluster trickles."""
+        return self.stats["batched_prompts"] / max(1, self.stats["batches"])
 
     # -------------------------------------------------------------- prefill
     def _prefill_fn(self, L: int, with_cache: bool):
@@ -56,6 +68,9 @@ class ServingEngine:
             out[idx] = last
             self.stats["prefill_tokens"] += int(lens.sum())
             self.stats["batches"] += 1
+            self.stats["batched_prompts"] += int(len(idx))
+            self.stats["batch_sizes"].append(int(len(idx)))
+            del self.stats["batch_sizes"][:-self._BATCH_SIZE_WINDOW]
         return out
 
     # --------------------------------------------------------------- decode

@@ -1,0 +1,151 @@
+"""Property tests: batched/segmented voting == per-cluster voting.
+
+Seeded-random sweeps (`hypothesis` is unavailable offline) over ragged
+cluster layouts — empty samples, empty rests, single-row clusters — assert
+that the round executor's one-shot entry points (`uni_vote_batch`,
+`sim_vote_batch`, `simvote_scores_segmented`) reproduce the per-cluster
+decisions exactly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.voting import (sim_vote, sim_vote_batch, uni_vote,
+                               uni_vote_batch)
+from repro.kernels.simvote.kernel import simvote_scores_segmented_pallas
+from repro.kernels.simvote.ref import (simvote_scores_ref,
+                                       simvote_scores_segmented_ref)
+
+SEEDS = list(range(10))
+
+
+def _ragged_clusters(rng, d=None):
+    c = int(rng.integers(1, 8))
+    d = d or int(rng.integers(2, 24))
+    xs, ss, ys = [], [], []
+    for _ in range(c):
+        n_c = int(rng.integers(0, 90))  # 0 => exhausted cluster
+        m_c = int(rng.integers(1, 40))
+        xs.append(rng.normal(size=(n_c, d)).astype(np.float32))
+        ss.append(rng.normal(size=(m_c, d)).astype(np.float32))
+        ys.append((rng.random(m_c) < rng.random()).astype(np.float32))
+    return xs, ss, ys
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_uni_vote_batch_matches_per_cluster(seed):
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(1, 10))
+    labels = [(rng.random(int(rng.integers(0, 60))) < rng.random()
+               ).astype(float) for _ in range(c)]
+    nuns = [int(rng.integers(0, 50)) for _ in range(c)]
+    lb = float(rng.uniform(0.05, 0.45))
+    ub = float(rng.uniform(lb + 0.05, 0.99))
+    batch = uni_vote_batch(labels, nuns, lb, ub)
+    assert len(batch) == c
+    for lab, n_c, b in zip(labels, nuns, batch):
+        v = uni_vote(lab, n_c, lb, ub)
+        assert (v.decided_true == b.decided_true).all()
+        assert (v.decided_false == b.decided_false).all()
+        assert (v.undetermined == b.undetermined).all()
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_sim_vote_batch_matches_per_cluster(seed):
+    rng = np.random.default_rng(seed)
+    xs, ss, ys = _ragged_clusters(rng)
+    lb = float(rng.uniform(0.1, 0.45))
+    ub = float(rng.uniform(lb + 0.05, 0.95))
+    batch = sim_vote_batch(xs, ss, ys, lb, ub)
+    for x, s, y, b in zip(xs, ss, ys, batch):
+        v = sim_vote(x, s, y, lb, ub)
+        assert (v.decided_true == b.decided_true).all()
+        assert (v.decided_false == b.decided_false).all()
+        assert (v.undetermined == b.undetermined).all()
+        if len(x):
+            np.testing.assert_allclose(v.scores, b.scores, rtol=1e-5,
+                                       atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_property_segmented_scores_match_per_cluster_ref(seed):
+    """simvote_scores_segmented == C independent simvote_scores_ref calls."""
+    rng = np.random.default_rng(seed + 100)
+    xs, ss, ys = _ragged_clusters(rng)
+    live = [i for i, x in enumerate(xs) if len(x)]
+    if not live:
+        return
+    d = xs[0].shape[1]
+    max_m = max(len(ss[i]) for i in live)
+    s_pad = np.zeros((len(live), max_m, d), np.float32)
+    y_pad = -np.ones((len(live), max_m), np.float32)
+    taus = rng.uniform(0.5, 2.0, len(live))
+    per = []
+    for r, i in enumerate(live):
+        s_pad[r, :len(ss[i])] = ss[i]
+        y_pad[r, :len(ss[i])] = ys[i]
+        per.append(np.asarray(simvote_scores_ref(
+            jnp.asarray(xs[i]), jnp.asarray(ss[i]), jnp.asarray(ys[i]),
+            float(taus[r]))))
+    counts = np.array([len(xs[i]) for i in live])
+    x_all = jnp.asarray(np.concatenate([xs[i] for i in live]))
+    seg = np.asarray(simvote_scores_segmented_ref(
+        x_all, counts, jnp.asarray(s_pad), jnp.asarray(y_pad), taus))
+    np.testing.assert_allclose(seg, np.concatenate(per), rtol=1e-5,
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_property_segmented_pallas_matches_segmented_ref(seed):
+    rng = np.random.default_rng(seed + 200)
+    xs, ss, ys = _ragged_clusters(rng, d=16)
+    live = [i for i, x in enumerate(xs) if len(x)]
+    if not live:
+        return
+    d = 16
+    max_m = max(len(ss[i]) for i in live)
+    s_pad = np.zeros((len(live), max_m, d), np.float32)
+    y_pad = -np.ones((len(live), max_m), np.float32)
+    taus = rng.uniform(0.5, 2.0, len(live))
+    for r, i in enumerate(live):
+        s_pad[r, :len(ss[i])] = ss[i]
+        y_pad[r, :len(ss[i])] = ys[i]
+    counts = np.array([len(xs[i]) for i in live])
+    x_all = jnp.asarray(np.concatenate([xs[i] for i in live]))
+    ref = np.asarray(simvote_scores_segmented_ref(
+        x_all, counts, jnp.asarray(s_pad), jnp.asarray(y_pad), taus))
+    pal = np.asarray(simvote_scores_segmented_pallas(
+        x_all, counts, jnp.asarray(s_pad), jnp.asarray(y_pad), taus,
+        block_n=32, block_m=16, interpret=True))
+    np.testing.assert_allclose(pal, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_uni_vote_batch_matches_at_exact_threshold_scores():
+    """float32 1/10 != float64 1/10: batch scoring must use the same dtype
+    arithmetic as uni_vote or the executors diverge at threshold-equal
+    scores (e.g. one positive in ten samples with lb=0.1)."""
+    labels = np.array([1] + [0] * 9, np.float32)
+    single = uni_vote(labels, 5, lb=0.1, ub=0.9)
+    batch, = uni_vote_batch([labels], [5], lb=0.1, ub=0.9)
+    assert (single.decided_false == batch.decided_false).all()
+    assert (single.undetermined == batch.undetermined).all()
+    assert len(single.decided_true) == len(batch.decided_true) == 0
+
+
+def test_uni_vote_empty_sample_is_undetermined():
+    """An empty sample must not silently vote everything False (lb >= 0)."""
+    vr = uni_vote(np.zeros(0), 7, lb=0.15, ub=0.85)
+    assert len(vr.undetermined) == 7
+    assert len(vr.decided_true) == 0 and len(vr.decided_false) == 0
+
+
+def test_sim_vote_empty_sample_is_undetermined():
+    """Same contract for SimVote: no samples, no (False) votes."""
+    x = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    vr = sim_vote(x, np.zeros((0, 8), np.float32), np.zeros(0), 0.15, 0.85)
+    assert len(vr.undetermined) == 5 and len(vr.decided_false) == 0
+    b_empty, b_live = sim_vote_batch(
+        [x, x], [np.zeros((0, 8), np.float32), x[:2]],
+        [np.zeros(0), np.array([1.0, 1.0], np.float32)], 0.15, 0.85)
+    assert len(b_empty.undetermined) == 5 and len(b_empty.decided_false) == 0
+    assert len(b_live.decided_true) == 5  # live cluster still votes

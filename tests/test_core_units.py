@@ -19,6 +19,9 @@ def test_uni_vote_cases():
     assert len(lo.decided_false) == 5
     mid = uni_vote(np.array([1, 0, 1, 0]), 5, 0.15, 0.85)
     assert len(mid.undetermined) == 5
+    # empty sample = no evidence: undetermined, never a silent False vote
+    none = uni_vote(np.zeros(0), 5, 0.15, 0.85)
+    assert len(none.undetermined) == 5 and len(none.decided_false) == 0
 
 
 def test_sim_vote_prefers_near_neighbors():

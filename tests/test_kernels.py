@@ -6,8 +6,10 @@ import pytest
 
 from repro.kernels.kmeans.kernel import assign_clusters_pallas
 from repro.kernels.kmeans.ref import assign_clusters_ref
-from repro.kernels.simvote.kernel import simvote_scores_pallas
-from repro.kernels.simvote.ref import simvote_scores_ref
+from repro.kernels.simvote.kernel import (simvote_scores_pallas,
+                                          simvote_scores_segmented_pallas)
+from repro.kernels.simvote.ref import (simvote_scores_ref,
+                                       simvote_scores_segmented_ref)
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
@@ -38,6 +40,38 @@ def test_simvote(n, m, d):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
                                atol=1e-6)
     assert (np.asarray(s1) >= 0).all() and (np.asarray(s1) <= 1 + 1e-6).all()
+
+
+@pytest.mark.parametrize("counts,ms", [([70, 3, 129, 40], [5, 17, 33, 2]),
+                                       ([1, 256], [40, 1]),
+                                       ([300], [64])])
+def test_simvote_segmented(counts, ms):
+    """One launch over ragged clusters == per-cluster reference scoring."""
+    rng = np.random.default_rng(sum(counts))
+    d, c = 16, len(counts)
+    max_m = max(ms)
+    s_pad = np.zeros((c, max_m, d), np.float32)
+    y_pad = -np.ones((c, max_m), np.float32)
+    taus = rng.uniform(0.5, 2.0, c)
+    xs, per = [], []
+    for i in range(c):
+        x = rng.normal(size=(counts[i], d)).astype(np.float32)
+        s = rng.normal(size=(ms[i], d)).astype(np.float32)
+        y = (rng.random(ms[i]) < 0.5).astype(np.float32)
+        xs.append(x)
+        s_pad[i, :ms[i]] = s
+        y_pad[i, :ms[i]] = y
+        per.append(np.asarray(simvote_scores_ref(
+            jnp.asarray(x), jnp.asarray(s), jnp.asarray(y), float(taus[i]))))
+    x_all = jnp.asarray(np.concatenate(xs))
+    ref = np.asarray(simvote_scores_segmented_ref(
+        x_all, np.asarray(counts), jnp.asarray(s_pad), jnp.asarray(y_pad),
+        taus))
+    pal = np.asarray(simvote_scores_segmented_pallas(
+        x_all, np.asarray(counts), jnp.asarray(s_pad), jnp.asarray(y_pad),
+        taus, block_n=64, block_m=16, interpret=True))
+    np.testing.assert_allclose(ref, np.concatenate(per), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(pal, np.concatenate(per), rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("B,H,KV,S,hd", [(1, 4, 4, 128, 64), (2, 8, 2, 256, 64),

@@ -1,0 +1,89 @@
+"""Regression: the round-vectorized executor == the sequential driver.
+
+The refactor's hard contract: under a fixed seed, batching every live
+cluster's sample into one cross-cluster oracle call and voting all clusters
+in one segmented dispatch changes NOTHING about the decisions — only the
+batch sizes the serving layer sees.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CSVConfig, SyntheticOracle, semantic_filter
+from repro.core.csv_filter import RoundResult
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imdb_review", n=3000, seed=0)
+
+
+def _run(ds, executor, vote="uni", depth=1, xi=0.005):
+    oracle = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+                             token_lens=ds.token_lens)
+    cfg = CSVConfig(n_clusters=4, xi=xi, vote=vote, executor=executor,
+                    pipeline_depth=depth)
+    return semantic_filter(ds.embeddings, oracle, cfg), oracle
+
+
+@pytest.mark.parametrize("vote", ["uni", "sim"])
+def test_round_executor_bit_identical_to_sequential(ds, vote):
+    r_seq, _ = _run(ds, "sequential", vote)
+    r_round, _ = _run(ds, "round", vote)
+    assert (r_seq.mask == r_round.mask).all()
+    assert r_seq.n_llm_calls == r_round.n_llm_calls
+    assert r_seq.cluster_log == r_round.cluster_log  # per-round cluster log
+    assert r_seq.n_voted == r_round.n_voted
+    assert r_seq.n_fallback == r_round.n_fallback
+    assert r_seq.recluster_rounds == r_round.recluster_rounds
+
+
+def test_pipelined_dispatch_bit_identical(ds):
+    """pipeline_depth > 1 (async double-buffered oracle) changes nothing."""
+    r_seq, _ = _run(ds, "sequential")
+    r_pipe, _ = _run(ds, "round", depth=3)
+    assert (r_seq.mask == r_pipe.mask).all()
+    assert r_seq.n_llm_calls == r_pipe.n_llm_calls
+    assert r_seq.cluster_log == r_pipe.cluster_log
+    waves = [r.waves for r in r_pipe.round_log]
+    assert max(waves) > 1  # the round was actually split into waves
+
+
+def test_round_executor_grows_oracle_batches(ds):
+    """The point of the refactor: per-invocation oracle batches grow from
+    ~per-cluster sample size to the cross-cluster round aggregate."""
+    r_seq, o_seq = _run(ds, "sequential")
+    r_round, o_round = _run(ds, "round")
+    assert o_seq.stats.mean_batch_size > 0
+    assert o_round.stats.mean_batch_size >= 2 * o_seq.stats.mean_batch_size
+    assert len(o_round.stats.batch_sizes) < len(o_seq.stats.batch_sizes)
+    # every round issued exactly one oracle submission (pipeline_depth=1)
+    assert all(r.waves == 1 for r in r_round.round_log)
+    assert all(isinstance(r, RoundResult) for r in r_round.round_log)
+
+
+def test_round_log_accounts_for_every_tuple(ds):
+    r, _ = _run(ds, "round")
+    n = len(ds.embeddings)
+    # each round partitions its clusters into sample + voted + undetermined;
+    # undetermined feed the next round or the fallback — totals are exact
+    total = sum(rr.n_sampled + rr.n_voted for rr in r.round_log)
+    assert total + r.n_fallback == n
+    for rr in r.round_log:
+        assert rr.n_sampled == sum(rr.oracle_batches)
+
+
+def test_filter_result_tokens_are_deltas(ds):
+    """Reusing one oracle across predicates must not inflate token metrics."""
+    oracle = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.0, seed=7,
+                             token_lens=ds.token_lens)
+    cfg = CSVConfig(n_clusters=4, xi=0.005)
+    r1 = semantic_filter(ds.embeddings, oracle, cfg)
+    lifetime_in = oracle.stats.input_tokens
+    assert r1.input_tokens == lifetime_in and r1.input_tokens > 0
+    # second run on the same oracle: everything memo-cached => zero deltas
+    r2 = semantic_filter(ds.embeddings, oracle, cfg)
+    assert r2.n_llm_calls == 0
+    assert r2.input_tokens == 0 and r2.output_tokens == 0
+    assert oracle.stats.input_tokens == lifetime_in
+    assert (r1.mask == r2.mask).all()
