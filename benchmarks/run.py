@@ -15,7 +15,7 @@ def main() -> None:
                     help="paper-scale dataset sizes (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
-                         "fig6,appb,kernels,roofline")
+                         "fig6,appb,kernels,roofline,plan_order")
     args = ap.parse_args()
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -24,14 +24,15 @@ def main() -> None:
                             bench_table2_quality, bench_table3_hyperparams,
                             bench_table4_recluster, bench_table5_theory,
                             bench_fig6_synthetic, bench_appb_backbones,
-                            bench_kernels, roofline_report)
+                            bench_kernels, bench_plan_order, roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
         ("table2", bench_table2_quality), ("table3", bench_table3_hyperparams),
         ("table4", bench_table4_recluster), ("table5", bench_table5_theory),
         ("fig6", bench_fig6_synthetic), ("appb", bench_appb_backbones),
-        ("kernels", bench_kernels), ("roofline", roofline_report),
+        ("kernels", bench_kernels), ("plan_order", bench_plan_order),
+        ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")
     for name, mod in suites:

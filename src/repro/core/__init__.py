@@ -11,11 +11,11 @@ from repro.core.theory import (xi_for_epsilon_univote, xi_for_epsilon_simvote,
                                bernstein_tail, choose_sample_size)
 from repro.core.clustering import kmeans, kmeans_predict, minibatch_kmeans_update
 from repro.core.voting import (uni_vote, sim_vote, uni_vote_batch,
-                               sim_vote_batch)
+                               sim_vote_batch, vote_clusters)
 from repro.core.csv_filter import (CSVConfig, FilterResult, RoundPlan,
                                    RoundResult, plan_round, semantic_filter)
 from repro.core.oracle import (SyntheticOracle, ModelOracle, OracleStats,
-                               ProxyModel, SyncOracleDispatcher,
+                               ProxyModel, StatsScope, SyncOracleDispatcher,
                                AsyncOracleDispatcher)
 from repro.core.baselines import reference_filter, lotus_filter, bargain_filter
 from repro.core.operators import SemanticTable

@@ -40,8 +40,7 @@ import numpy as np
 from repro.core import theory
 from repro.core.clustering import kmeans
 from repro.core.oracle import AsyncOracleDispatcher, SyncOracleDispatcher
-from repro.core.voting import (sim_vote, sim_vote_batch, uni_vote,
-                               uni_vote_batch)
+from repro.core.voting import sim_vote, uni_vote, vote_clusters
 
 
 @dataclasses.dataclass
@@ -83,6 +82,9 @@ class FilterResult:
     xi_used: float
     round_log: list = dataclasses.field(default_factory=list)
     oracle_batch_sizes: list = dataclasses.field(default_factory=list)
+    # tuples the driver was asked to decide: the full table, or the live
+    # subset when a plan cascade masks out already-rejected tuples
+    n_input: int = -1
 
 
 # ---------------------------------------------------------------- round plan
@@ -138,16 +140,13 @@ def _vote_wave(wave: list, labels_by_cluster: list, emb: np.ndarray,
     live = [i for i, cp in enumerate(wave) if len(cp.rest_ids)]
     if not live:
         return {}
-    if cfg.vote == "sim":
-        votes = sim_vote_batch(
-            [emb[wave[i].rest_ids] for i in live],
-            [emb[wave[i].sample_ids] for i in live],
-            [labels_by_cluster[i].astype(np.float32) for i in live],
-            lb, ub, cfg.sim_bandwidth)
-    else:
-        votes = uni_vote_batch(
-            [labels_by_cluster[i].astype(np.float32) for i in live],
-            [len(wave[i].rest_ids) for i in live], lb, ub)
+    sim = cfg.vote == "sim"
+    votes = vote_clusters(
+        cfg.vote, [labels_by_cluster[i] for i in live],
+        [len(wave[i].rest_ids) for i in live], lb, ub,
+        emb_unsampled=[emb[wave[i].rest_ids] for i in live] if sim else None,
+        emb_sampled=[emb[wave[i].sample_ids] for i in live] if sim else None,
+        bandwidth=cfg.sim_bandwidth)
     return dict(zip(live, votes))
 
 
@@ -340,12 +339,18 @@ def _derive_xi(cfg: CSVConfig, sigma2: float) -> float:
 
 
 def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
-                    precomputed_assign: Optional[np.ndarray] = None
+                    precomputed_assign: Optional[np.ndarray] = None,
+                    subset_ids: Optional[np.ndarray] = None
                     ) -> FilterResult:
     """Run CSV over a table represented by its tuple embeddings.
 
     embeddings: (N, D) — generated offline (paper phase 1).
     oracle: callable(ids)->bool array with .stats (see repro.core.oracle).
+    subset_ids: restrict the filter to these tuple ids (plan-cascade entry
+    point: conjuncts after the first only see tuples still alive).  The
+    returned mask stays full-length with False outside the subset; a
+    full-table ``precomputed_assign`` is restricted to the subset, so the
+    offline clustering is reused rather than recomputed per conjunct.
     """
     cfg = cfg or CSVConfig()
     if cfg.executor not in ("round", "sequential"):
@@ -361,18 +366,31 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
     xi = _derive_xi(cfg, sigma2=0.25)  # worst-case sigma before seeing data
     cluster_log: list = []
     round_log: list = []
+    subset = (None if subset_ids is None
+              else np.unique(np.asarray(subset_ids, dtype=np.int64)))
 
     # ---- initial clustering (offline phase; query-agnostic) ----
-    if precomputed_assign is not None:
+    if subset is not None and len(subset) == 0:
+        queue = []
+    elif precomputed_assign is not None:
         assign = np.asarray(precomputed_assign)
+        if subset is not None:
+            sub_assign = assign[subset]
+            queue = [subset[sub_assign == c]
+                     for c in range(int(sub_assign.max()) + 1)]
+        else:
+            queue = [np.nonzero(assign == c)[0]
+                     for c in range(int(assign.max()) + 1)]
+        queue = [c for c in queue if len(c)]
     else:
+        rows = subset if subset is not None else np.arange(n)
         key = jax.random.key(cfg.seed)
-        _, assign, _ = kmeans(key, jnp.asarray(emb), cfg.n_clusters,
+        k = min(cfg.n_clusters, len(rows))
+        _, assign, _ = kmeans(key, jnp.asarray(emb[rows]), k,
                               max_iters=cfg.kmeans_iters)
         assign = np.asarray(assign)
-
-    queue = [np.nonzero(assign == c)[0] for c in range(int(assign.max()) + 1)]
-    queue = [c for c in queue if len(c)]
+        queue = [rows[assign == c] for c in range(int(assign.max()) + 1)]
+        queue = [c for c in queue if len(c)]
 
     run = (_run_sequential_executor if cfg.executor == "sequential"
            else _run_round_executor)
@@ -380,7 +398,10 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         emb, oracle, cfg, rng, xi, result, decided, cluster_log, round_log,
         queue)
 
-    assert decided.all(), "driver must decide every tuple"
+    if subset is None:
+        assert decided.all(), "driver must decide every tuple"
+    else:
+        assert decided[subset].all(), "driver must decide every subset tuple"
     delta = oracle.stats.delta(stats_before)
     return FilterResult(
         mask=result,
@@ -396,4 +417,5 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         xi_used=xi,
         round_log=round_log,
         oracle_batch_sizes=delta.batch_sizes,
+        n_input=int(n if subset is None else len(subset)),
     )

@@ -26,7 +26,9 @@ class SemanticTable:
         self._embeddings = (np.asarray(embeddings, np.float32)
                             if embeddings is not None else None)
         self._embedder = embedder
-        self._assign_cache: dict[int, np.ndarray] = {}
+        # keyed by (n_clusters, seed); shared by sem_filter, the plan
+        # executor's cascade subsets, and each side of a semantic join
+        self._assign_cache: dict[tuple[int, int], np.ndarray] = {}
 
     def __len__(self):
         if self.texts is not None:
@@ -90,6 +92,39 @@ class SemanticTable:
                   if reuse_clustering else None)
         return semantic_filter(self.embeddings, oracle, cfg,
                                precomputed_assign=assign)
+
+    def sem_filter_expr(self, expr, cfg: Optional[CSVConfig] = None,
+                        optimize: bool = True, pilot_size: int = 32,
+                        reuse_clustering: bool = True, **kw):
+        """Evaluate a composed predicate expression (``repro.plan`` AST).
+
+        expr: ``Pred`` / ``And`` / ``Or`` / ``Not`` tree; each leaf carries
+        its own oracle.  Conjuncts/disjuncts are cost-ordered from a pilot
+        sample (``optimize=True``) and evaluated as a short-circuit cascade:
+        tuples decided by an earlier node are masked out of later CSV runs.
+        Returns a ``PlanResult``.
+        """
+        from repro.plan.executor import PlanExecutor
+        return PlanExecutor(self, cfg=cfg, optimize=optimize,
+                            pilot_size=pilot_size,
+                            reuse_clustering=reuse_clustering, **kw).run(expr)
+
+    def sem_join(self, right: "SemanticTable", oracle, cfg=None,
+                 reuse_clustering: bool = True):
+        """CSV-backed semantic join against another table.
+
+        oracle: callable over *pair ids* ``i * len(right) + j`` (see
+        ``repro.plan.join.pair_ids``).  Both sides' offline clusterings come
+        from the tables' precluster caches.  Returns a ``JoinResult``.
+        """
+        from repro.plan.join import JoinConfig, sem_join
+        cfg = cfg or JoinConfig()
+        assign_l = assign_r = None
+        if reuse_clustering:
+            assign_l = self.precluster(cfg.n_clusters_left, cfg.seed)
+            assign_r = right.precluster(cfg.n_clusters_right, cfg.seed)
+        return sem_join(self.embeddings, right.embeddings, oracle, cfg,
+                        assign_left=assign_l, assign_right=assign_r)
 
 
 def accuracy_f1(pred: np.ndarray, truth: np.ndarray) -> tuple[float, float]:

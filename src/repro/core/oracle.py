@@ -14,9 +14,10 @@ the CSV driver restartable (fault tolerance).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -50,12 +51,34 @@ class OracleStats:
                 if self.batch_sizes else 0.0)
 
 
+@dataclasses.dataclass
+class StatsScope:
+    """Holder filled at ``BaseOracle.scope()`` exit with the block's delta."""
+    delta: Optional[OracleStats] = None
+
+
 class BaseOracle:
     """Batched, memoized oracle."""
 
     def __init__(self):
         self.stats = OracleStats()
         self._memo: dict[int, bool] = {}
+
+    @contextlib.contextmanager
+    def scope(self):
+        """Attribute accounting to one plan node / pilot probe.
+
+        Yields a ``StatsScope`` whose ``.delta`` is set on exit to the calls
+        and tokens spent inside the with-block — the plan executor uses one
+        scope per expression node so a shared or memoized oracle never
+        inflates another node's efficiency metrics.
+        """
+        before = self.stats.clone()
+        holder = StatsScope()
+        try:
+            yield holder
+        finally:
+            holder.delta = self.stats.delta(before)
 
     def _evaluate(self, ids: np.ndarray) -> np.ndarray:  # -> bool array
         raise NotImplementedError

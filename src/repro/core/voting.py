@@ -76,6 +76,29 @@ def uni_vote_batch(sample_labels: Sequence[np.ndarray],
             for s, n_c in zip(sample_labels, n_unsampled)]
 
 
+def vote_clusters(kind: str, sample_labels: Sequence[np.ndarray],
+                  n_unsampled: Sequence[int], lb: float, ub: float,
+                  emb_unsampled: Optional[Sequence[np.ndarray]] = None,
+                  emb_sampled: Optional[Sequence[np.ndarray]] = None,
+                  bandwidth: Optional[float] = None) -> list[VoteResult]:
+    """One segmented voting dispatch for a round, either strategy.
+
+    The CSV round executor and the semantic join share this entry point:
+    ``kind="uni"`` needs only per-cluster sample labels and unsampled counts;
+    ``kind="sim"`` additionally takes the per-cluster embedding lists (for a
+    join these are lazily built pair embeddings).  Decisions are identical to
+    the per-cluster ``uni_vote`` / ``sim_vote`` calls.
+    """
+    labels = [np.asarray(s, np.float32) for s in sample_labels]
+    if kind == "sim":
+        assert emb_unsampled is not None and emb_sampled is not None
+        return sim_vote_batch(emb_unsampled, emb_sampled, labels, lb, ub,
+                              bandwidth)
+    if kind != "uni":
+        raise ValueError(f"unknown vote kind {kind!r}; expected 'uni' or 'sim'")
+    return uni_vote_batch(labels, [int(c) for c in n_unsampled], lb, ub)
+
+
 def default_bandwidth(emb_sampled: np.ndarray) -> float:
     """Self-tuning tau: median pairwise distance over (a subset of) samples."""
     m = emb_sampled.shape[0]

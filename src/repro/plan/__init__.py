@@ -1,0 +1,27 @@
+"""Semantic query plans: composable predicate DAGs over CSV filters.
+
+Public API:
+    Pred / And / Or / Not            — expression AST (&, |, ~ operators)
+    PlanExecutor / PlanResult        — cost-ordered short-circuit cascades
+    optimize / PlanEstimate          — logical -> physical lowering
+    pilot_predicates / est_oracle_calls — the cost model
+    sem_join / JoinConfig / JoinResult / pair_ids — CSV-backed semantic join
+
+Operator-layer entry points: ``SemanticTable.sem_filter_expr(expr)`` and
+``SemanticTable.sem_join(right, oracle)``.  See docs/query_plans.md.
+"""
+from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
+from repro.plan.cost import PredStats, est_oracle_calls, pilot_predicates
+from repro.plan.optimizer import PlanEstimate, optimize
+from repro.plan.executor import NodeRecord, PlanExecutor, PlanResult
+from repro.plan.join import (JoinBlock, JoinConfig, JoinResult, JoinRound,
+                             pair_ids, sem_join)
+
+__all__ = [
+    "And", "Expr", "Not", "Or", "Pred", "needs_ordering",
+    "PredStats", "est_oracle_calls", "pilot_predicates",
+    "PlanEstimate", "optimize",
+    "NodeRecord", "PlanExecutor", "PlanResult",
+    "JoinBlock", "JoinConfig", "JoinResult", "JoinRound",
+    "pair_ids", "sem_join",
+]

@@ -1,0 +1,194 @@
+"""Query-plan subsystem: AST lowering, cascades, and the cost optimizer.
+
+Two hard contracts (ISSUE 2 acceptance criteria):
+1. a single-``Pred`` expression through the plan executor is bit-identical
+   (mask, call count) to ``sem_filter`` under the same seed;
+2. on a 3-conjunct workload the optimizer-ordered cascade spends strictly
+   fewer oracle calls than naive left-to-right evaluation, pilot included.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CSVConfig, SemanticTable, SyntheticOracle
+from repro.core.csv_filter import semantic_filter
+from repro.data import make_dataset
+from repro.plan import (And, Not, Or, PlanExecutor, Pred, needs_ordering,
+                        optimize, pilot_predicates)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imdb_review", n=3000, seed=0)
+
+
+def _oracle(ds, q, flip=0.02):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=7,
+                           token_lens=ds.token_lens)
+
+
+CFG = CSVConfig(n_clusters=4, xi=0.005)
+
+
+# ------------------------------------------------------------------ AST
+def test_operator_composition_flattens():
+    a, b, c = (Pred(n, oracle=None) for n in "abc")
+    expr = (a & b) & ~c
+    assert isinstance(expr, And) and len(expr.children) == 3
+    assert [p.name for p in expr.leaves()] == ["a", "b", "c"]
+    assert expr.label == "(a AND b AND NOT c)"
+    assert needs_ordering(expr)
+    assert not needs_ordering(a)
+    assert not needs_ordering(~a)  # Not has a unique order: no pilot needed
+    with pytest.raises(TypeError):
+        And(a, "not an expr")
+
+
+def test_duplicate_name_with_different_oracles_rejected(ds):
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = Pred("q", _oracle(ds, "RV-Q1")) & Pred("q", _oracle(ds, "RV-Q2"))
+    with pytest.raises(ValueError, match="unique name"):
+        PlanExecutor(table, cfg=CFG).run(expr)
+
+
+# ------------------------------------------------------- bit identity
+def test_single_pred_bit_identical_to_sem_filter(ds):
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    r_ref = table.sem_filter(_oracle(ds, "RV-Q1"), cfg=CFG)
+    r_plan = table.sem_filter_expr(Pred("RV-Q1", _oracle(ds, "RV-Q1")),
+                                   cfg=CFG)
+    assert (r_ref.mask == r_plan.mask).all()
+    assert r_ref.n_llm_calls == r_plan.n_llm_calls
+    assert r_plan.pilot_calls == 0  # no ordering choice => no pilot spent
+    assert r_plan.order == ["RV-Q1"]
+    assert r_plan.results["RV-Q1"].n_input == len(ds.embeddings)
+
+
+# --------------------------------------------------------- optimizer
+def test_optimizer_beats_naive_three_conjuncts(ds):
+    """The selective conjunct (RV-Q3, ~5%) must run first and shrink the
+    later CSV runs enough to beat left-to-right even after paying for the
+    pilot sample."""
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+
+    def expr():
+        return And(Pred("RV-Q1", _oracle(ds, "RV-Q1")),
+                   Pred("RV-Q2", _oracle(ds, "RV-Q2")),
+                   Pred("RV-Q3", _oracle(ds, "RV-Q3")))
+
+    naive = PlanExecutor(table, cfg=CFG, optimize=False).run(expr())
+    opt = PlanExecutor(table, cfg=CFG, optimize=True).run(expr())
+    assert naive.order == ["RV-Q1", "RV-Q2", "RV-Q3"]
+    assert opt.order[0] == "RV-Q3"  # most selective first
+    assert opt.pilot_calls > 0
+    assert opt.n_llm_calls < naive.n_llm_calls  # pilot included, strictly
+    assert opt.est_calls_saved > 0
+    assert opt.estimate.est_calls_ordered < opt.estimate.est_calls_naive
+    # both plans agree with composing per-predicate ground truth closely
+    truth = (ds.labels["RV-Q1"] & ds.labels["RV-Q2"] & ds.labels["RV-Q3"])
+    assert np.mean(opt.mask == truth) > 0.9
+
+
+def test_cascade_shrinks_live_sets(ds):
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = And(Pred("RV-Q3", _oracle(ds, "RV-Q3")),
+               Pred("RV-Q2", _oracle(ds, "RV-Q2")),
+               Pred("RV-Q1", _oracle(ds, "RV-Q1")))
+    r = PlanExecutor(table, cfg=CFG, optimize=False).run(expr)
+    n_in = [rec.n_in for rec in r.node_log]
+    assert n_in[0] == len(ds.embeddings)
+    assert n_in[1] < n_in[0] and n_in[2] <= n_in[1]
+    for rec in r.node_log:  # later conjuncts ran on the advertised subset
+        assert rec.result.n_input == rec.n_in
+
+
+def test_or_cascade_skips_accepted_tuples(ds):
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = Or(Pred("RV-Q2", _oracle(ds, "RV-Q2")),
+              Pred("RV-Q1", _oracle(ds, "RV-Q1")))
+    r = PlanExecutor(table, cfg=CFG, optimize=False).run(expr)
+    assert r.node_log[1].n_in == len(ds.embeddings) - r.node_log[0].n_out
+
+
+def test_optimizer_orders_disjuncts_most_selective_last(ds):
+    """OR short-circuits on True: high-selectivity disjuncts drop the most
+    tuples, so the rank puts them first (cost/s ascending)."""
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = Or(Pred("RV-Q3", _oracle(ds, "RV-Q3")),   # ~5% pass
+              Pred("RV-Q1", _oracle(ds, "RV-Q1")))   # ~50% pass
+    r = PlanExecutor(table, cfg=CFG, optimize=True).run(expr)
+    assert r.order[0] == "RV-Q1"
+
+
+# -------------------------------------------------- exact composition
+def test_and_or_not_semantics_exact_when_exhausted():
+    """n small enough that every cluster is fully sampled: CSV is exact,
+    so the cascade must reproduce the boolean composition bit-for-bit."""
+    ds = make_dataset("imdb_review", n=260, seed=3)
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = ((Pred("q1", _oracle(ds, "RV-Q1", flip=0.0))
+             & ~Pred("q2", _oracle(ds, "RV-Q2", flip=0.0)))
+            | Pred("q3", _oracle(ds, "RV-Q3", flip=0.0)))
+    r = PlanExecutor(table, cfg=CFG, optimize=True).run(expr)
+    truth = ((ds.labels["RV-Q1"] & ~ds.labels["RV-Q2"])
+             | ds.labels["RV-Q3"])
+    assert (r.mask == truth).all()
+
+
+# --------------------------------------------------- subset execution
+def test_semantic_filter_subset_decides_only_subset(ds):
+    oracle = _oracle(ds, "RV-Q1")
+    subset = np.arange(0, len(ds.embeddings), 3)
+    r = semantic_filter(ds.embeddings, oracle, CFG, subset_ids=subset)
+    assert r.n_input == len(subset)
+    outside = np.ones(len(ds.embeddings), dtype=bool)
+    outside[subset] = False
+    assert not r.mask[outside].any()  # mask stays False off-subset
+    assert 0 < r.n_llm_calls <= len(subset)
+
+
+def test_semantic_filter_empty_subset(ds):
+    oracle = _oracle(ds, "RV-Q1")
+    r = semantic_filter(ds.embeddings, oracle, CFG,
+                        subset_ids=np.array([], dtype=np.int64))
+    assert r.n_llm_calls == 0 and not r.mask.any() and r.n_input == 0
+
+
+def test_subset_restricts_precomputed_assignment(ds):
+    """Full-table precluster assignment + subset run must agree with
+    clustering structure: every queue cluster is a subset of one full
+    cluster, so per-cluster accounting still adds up."""
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    assign = table.precluster(CFG.n_clusters, CFG.seed)
+    subset = np.nonzero(ds.labels["RV-Q2"])[0]
+    r = semantic_filter(ds.embeddings, _oracle(ds, "RV-Q1"), CFG,
+                        precomputed_assign=assign, subset_ids=subset)
+    sampled_plus_voted = sum(rr.n_sampled + rr.n_voted for rr in r.round_log)
+    assert sampled_plus_voted + r.n_fallback == len(subset)
+
+
+def test_plan_reuses_precluster_cache(ds):
+    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
+    expr = And(Pred("RV-Q3", _oracle(ds, "RV-Q3")),
+               Pred("RV-Q2", _oracle(ds, "RV-Q2")),
+               Pred("RV-Q1", _oracle(ds, "RV-Q1")))
+    PlanExecutor(table, cfg=CFG, optimize=True).run(expr)
+    # one offline clustering serves all three cascaded predicates
+    assert list(table._assign_cache) == [(CFG.n_clusters, CFG.seed)]
+
+
+# ----------------------------------------------------- cost model unit
+def test_pilot_and_optimize_are_deterministic(ds):
+    leaves = [Pred("RV-Q1", _oracle(ds, "RV-Q1")),
+              Pred("RV-Q3", _oracle(ds, "RV-Q3"))]
+    rng1 = np.random.default_rng(5)
+    rng2 = np.random.default_rng(5)
+    live = np.arange(len(ds.embeddings))
+    s1 = pilot_predicates(leaves, live, rng1, 32)
+    s2 = pilot_predicates([Pred("RV-Q1", _oracle(ds, "RV-Q1")),
+                           Pred("RV-Q3", _oracle(ds, "RV-Q3"))],
+                          live, rng2, 32)
+    assert s1["RV-Q3"].selectivity == s2["RV-Q3"].selectivity
+    assert 0.0 < s1["RV-Q3"].selectivity < s1["RV-Q1"].selectivity
+    est = optimize(And(*leaves), len(ds.embeddings), s1, CFG)
+    assert est.order == ["RV-Q3", "RV-Q1"]
+    assert est.naive_order == ["RV-Q1", "RV-Q3"]

@@ -1,0 +1,97 @@
+"""CSV-backed semantic join: correctness, sublinearity, refinement."""
+import numpy as np
+import pytest
+
+from repro.core import SemanticTable, SyntheticOracle
+from repro.data import make_dataset
+from repro.plan import JoinConfig, pair_ids, sem_join
+
+
+def _sides(nl=80, nr=60, n_topics=4):
+    dl = make_dataset("imdb_review", n=nl, seed=1, n_topics=n_topics)
+    dr = make_dataset("imdb_review", n=nr, seed=2, n_topics=n_topics)
+    return dl, dr
+
+
+def _pair_oracle(truth, flip=0.0, seed=3):
+    return SyntheticOracle(truth.ravel(), flip_prob=flip, seed=seed)
+
+
+def test_join_exact_when_blocks_exhausted():
+    """Blocks small enough that every pair is sampled: the join is the
+    exact cross product filter."""
+    dl, dr = _sides(nl=20, nr=20)
+    truth = (dl.topics[:, None] % 2) == (dr.topics[None, :] % 2)
+    oracle = _pair_oracle(truth)
+    r = sem_join(dl.embeddings, dr.embeddings, oracle,
+                 JoinConfig(n_clusters_left=4, n_clusters_right=4))
+    assert (r.pair_mask == truth).all()
+    assert r.pair_mask.shape == (20, 20)
+    assert set(map(tuple, r.pairs)) == set(map(tuple, np.argwhere(truth)))
+
+
+def test_join_sublinear_in_pairs():
+    """Topic-separable pair predicate: voting decides most blocks from a
+    ~101-pair sample each, far below the |L| x |R| reference cost."""
+    dl, dr = _sides(nl=400, nr=300)
+    truth = (dl.topics[:, None] % 2) == (dr.topics[None, :] % 2)
+    oracle = _pair_oracle(truth)
+    r = sem_join(dl.embeddings, dr.embeddings, oracle,
+                 JoinConfig(n_clusters_left=4, n_clusters_right=4))
+    n_pairs = truth.size
+    acc = float(np.mean(r.pair_mask == truth))
+    assert acc >= 0.95
+    assert r.n_llm_calls < 0.25 * n_pairs
+    assert r.n_voted > 0.5 * n_pairs
+    # accounting: every pair was sampled, voted, or fell back
+    sampled = sum(rr.n_sampled for rr in r.round_log)
+    assert sampled + r.n_voted + r.n_fallback == n_pairs
+
+
+def test_join_refines_impure_blocks_to_exact_fallback():
+    """A checkerboard predicate is invisible to clustering: every block
+    votes undetermined, refinement splits until the fallback decides each
+    pair directly — slow but exact (flip 0)."""
+    dl, dr = _sides(nl=40, nr=40)
+    ii = np.arange(40)
+    truth = ((ii[:, None] + ii[None, :]) % 2).astype(bool)
+    oracle = _pair_oracle(truth)
+    r = sem_join(dl.embeddings, dr.embeddings, oracle,
+                 JoinConfig(n_clusters_left=2, n_clusters_right=2,
+                            max_refine=2))
+    assert (r.pair_mask == truth).all()
+    assert r.refine_rounds >= 1
+    assert r.n_fallback > 0
+
+
+def test_join_sim_vote_path():
+    dl, dr = _sides(nl=60, nr=60)
+    truth = (dl.topics[:, None] % 2) == (dr.topics[None, :] % 2)
+    oracle = _pair_oracle(truth)
+    r = sem_join(dl.embeddings, dr.embeddings, oracle,
+                 JoinConfig(n_clusters_left=3, n_clusters_right=3,
+                            vote="sim"))
+    assert r.pair_mask.shape == truth.shape
+    assert float(np.mean(r.pair_mask == truth)) >= 0.85
+
+
+def test_table_api_reuses_precluster_and_is_deterministic():
+    dl, dr = _sides(nl=90, nr=70)
+    truth = (dl.topics[:, None] % 2) == (dr.topics[None, :] % 2)
+    tl = SemanticTable(texts=dl.texts, embeddings=dl.embeddings)
+    tr = SemanticTable(texts=dr.texts, embeddings=dr.embeddings)
+    cfg = JoinConfig(n_clusters_left=4, n_clusters_right=4)
+    r1 = tl.sem_join(tr, _pair_oracle(truth, flip=0.02), cfg=cfg)
+    assert (cfg.n_clusters_left, cfg.seed) in tl._assign_cache
+    assert (cfg.n_clusters_right, cfg.seed) in tr._assign_cache
+    r2 = tl.sem_join(tr, _pair_oracle(truth, flip=0.02), cfg=cfg)
+    assert (r1.pair_mask == r2.pair_mask).all()  # same seed, same decisions
+    assert r1.n_llm_calls == r2.n_llm_calls
+
+
+def test_pair_ids_roundtrip():
+    i = np.array([0, 1, 2])
+    j = np.array([5, 0, 3])
+    pid = pair_ids(i, j, n_right=7)
+    assert (pid // 7 == i).all() and (pid % 7 == j).all()
+    assert pid.dtype == np.int64
