@@ -1,0 +1,87 @@
+"""Lazy-API overhead: Session/Query vs. direct ``semantic_filter``.
+
+ISSUE 3 satellite: the declarative layer must add ZERO extra oracle calls
+and negligible wall-clock overhead.  Both paths run the Fig. 4 small cases
+with identical seeds and a pre-warmed clustering cache, so the measured
+difference is exactly the query-building + plan-lowering + result-wrapping
+cost of ``repro.api``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.api import ExecutionPolicy, Session
+from repro.core import CSVConfig, SemanticTable, SyntheticOracle
+from repro.core.csv_filter import semantic_filter
+from repro.data import make_dataset
+
+CASES = [("imdb_review", "RV-Q1", 20000), ("airdialogue", "AD-Q1", 20000)]
+
+
+def main(small: bool = False):
+    rows = []
+    for ds_name, q, n in CASES:
+        if small:
+            n = min(n, 4000)
+        ds = make_dataset(ds_name, n=n, seed=0)
+        truth = ds.labels[q]
+        cfg = CSVConfig(n_clusters=4, xi=0.005)
+        policy = ExecutionPolicy.from_csv_config(cfg)
+
+        # pre-warm clustering on both paths so the delta is pure API overhead
+        table = SemanticTable(embeddings=ds.embeddings)
+        assign = table.precluster(cfg.n_clusters, cfg.seed)
+        sess = Session()
+        handle = sess.table(table=table, name=ds_name)
+        handle.precluster(cfg.n_clusters, cfg.seed)
+
+        # untimed warm-up: JIT-compile the kmeans/voting kernels so neither
+        # timed path pays one-off compilation
+        semantic_filter(ds.embeddings,
+                        SyntheticOracle(truth, flip_prob=0.02, seed=7,
+                                        token_lens=ds.token_lens),
+                        cfg, precomputed_assign=assign)
+
+        def fresh_oracle():
+            # a fresh oracle per repetition: same seed => identical work,
+            # and no cross-rep memo hits that would shortcut the driver
+            return SyntheticOracle(truth, flip_prob=0.02, seed=7,
+                                   token_lens=ds.token_lens)
+
+        def best_of(run, reps=5):
+            best, result = float("inf"), None
+            for _ in range(reps):
+                t0 = time.time()
+                r = run(fresh_oracle())
+                best = min(best, time.time() - t0)
+                result = r
+            return best, result
+
+        # best-of-N per path: single runs are ~10 ms, dominated by scheduler
+        # noise; the minimum isolates the deterministic work
+        wall_direct, r_direct = best_of(
+            lambda o: semantic_filter(ds.embeddings, o, cfg,
+                                      precomputed_assign=assign))
+        wall_api, r_api = best_of(
+            lambda o: handle.filter(o, name=q, policy=policy).collect())
+
+        identical = bool((r_api.mask == r_direct.mask).all())
+        extra_calls = r_api.n_llm_calls - r_direct.n_llm_calls
+        overhead_s = wall_api - wall_direct
+        overhead_pct = overhead_s / max(wall_direct, 1e-9) * 100
+        emit(f"api_overhead/{ds_name}/{q}",
+             wall_api / max(1, r_api.n_llm_calls) * 1e6,
+             f"direct_s={wall_direct:.3f};api_s={wall_api:.3f};"
+             f"overhead_ms={overhead_s*1e3:.1f};overhead_pct={overhead_pct:.1f};"
+             f"extra_oracle_calls={extra_calls};identical_mask={identical}")
+        rows.append((ds_name, q, wall_direct, wall_api, extra_calls,
+                     identical))
+    return rows
+
+
+if __name__ == "__main__":
+    main(small=True)

@@ -8,8 +8,8 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (CSVConfig, SemanticTable, SyntheticOracle, ProxyModel,
-                        reference_filter)
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle, ProxyModel
 from repro.core.operators import accuracy_f1
 from repro.data import make_dataset
 
@@ -20,27 +20,35 @@ ORACLE_COST, PROXY_COST = 1.0, 0.375
 
 def run_method(table, truth, token_lens, method, flip=0.02, cfg=None,
                proxy_kw=None, seed=7, **kw):
+    """One method run via the canonical ``repro.api`` session layer
+    (bit-identical to the legacy ``sem_filter`` dispatch — tests/test_api.py).
+    ``table`` may be a ``SemanticTable`` (wrapped) or a ``TableHandle``."""
     oracle = SyntheticOracle(truth, flip_prob=flip, seed=seed,
                              token_lens=token_lens)
-    t0 = time.time()
-    if method == "reference":
-        r = reference_filter(len(truth), oracle)
-    elif method in ("lotus", "bargain"):
+    proxy = None
+    if method in ("lotus", "bargain"):
         proxy = ProxyModel(truth, token_lens=token_lens,
                            **(proxy_kw or dict(quality=0.8, center=0.82,
                                                concentration=0.15)))
-        r = table.sem_filter(oracle, method=method, proxy=proxy, **kw)
-    else:
-        r = table.sem_filter(oracle, method=method, cfg=cfg, **kw)
+    policy = ExecutionPolicy.from_csv_config(cfg, method=method,
+                                             baseline=dict(kw)) \
+        if cfg is not None else ExecutionPolicy(method=method,
+                                                baseline=dict(kw))
+    handle = table if hasattr(table, "session") else Session().table(table=table)
+    t0 = time.time()
+    qr = handle.filter(oracle, name="bench", proxy=proxy,
+                       policy=policy).collect()
     wall = time.time() - t0
-    acc, f1 = accuracy_f1(r.mask, truth)
-    oracle_calls = getattr(r, "n_llm_calls", getattr(r, "n_oracle_calls", 0))
-    proxy_calls = getattr(r, "n_proxy_calls", 0)
+    acc, f1 = accuracy_f1(qr.mask, truth)
+    # per-predicate FilterResult for csv paths (recluster/round detail);
+    # BaselineResult otherwise
+    r = (qr.raw.results["bench"] if qr.kind == "filter" else qr.raw)
     return {
         "method": method, "acc": acc, "f1": f1,
-        "oracle_calls": oracle_calls, "proxy_calls": proxy_calls,
-        "weighted_calls": oracle_calls * ORACLE_COST + proxy_calls * PROXY_COST,
-        "tokens": getattr(r, "input_tokens", 0) + getattr(r, "output_tokens", 0),
+        "oracle_calls": qr.n_llm_calls, "proxy_calls": qr.n_proxy_calls,
+        "weighted_calls": (qr.n_llm_calls * ORACLE_COST
+                          + qr.n_proxy_calls * PROXY_COST),
+        "tokens": qr.input_tokens + qr.output_tokens,
         "wall_s": wall,
         # serving-side efficiency: tuples per model invocation.  The round
         # executor submits cross-cluster round batches, so this grows from

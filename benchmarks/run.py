@@ -15,7 +15,7 @@ def main() -> None:
                     help="paper-scale dataset sizes (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
-                         "fig6,appb,kernels,roofline,plan_order")
+                         "fig6,appb,kernels,roofline,plan_order,api_overhead")
     args = ap.parse_args()
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -24,7 +24,8 @@ def main() -> None:
                             bench_table2_quality, bench_table3_hyperparams,
                             bench_table4_recluster, bench_table5_theory,
                             bench_fig6_synthetic, bench_appb_backbones,
-                            bench_kernels, bench_plan_order, roofline_report)
+                            bench_kernels, bench_plan_order,
+                            bench_api_overhead, roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
@@ -32,6 +33,7 @@ def main() -> None:
         ("table4", bench_table4_recluster), ("table5", bench_table5_theory),
         ("fig6", bench_fig6_synthetic), ("appb", bench_appb_backbones),
         ("kernels", bench_kernels), ("plan_order", bench_plan_order),
+        ("api_overhead", bench_api_overhead),
         ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")

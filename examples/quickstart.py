@@ -1,44 +1,73 @@
-"""Quickstart: CSV semantic filter end-to-end on a synthetic table.
+"""Quickstart: the lazy Session/Query API end-to-end on a synthetic table.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the canonical ``repro.api`` surface: one Session, lazy
+``.filter()`` queries, ``.explain()`` before spending a single oracle call,
+``.collect()`` routing (CSV vs. the linear reference baseline), predicate
+composition with ``&``/``~``, and run-level session accounting.
 """
 import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core import CSVConfig, SemanticTable, SyntheticOracle, reference_filter
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
 from repro.core.operators import accuracy_f1
 from repro.data import make_dataset
 
 
-def main():
-    print("== CSV semantic filter quickstart ==")
-    ds = make_dataset("imdb_review", n=10000, seed=0)
-    truth = ds.labels["RV-Q1"]
-    table = SemanticTable(texts=ds.texts, embeddings=ds.embeddings)
-    print(f"table: {len(table)} tuples; predicate: 'the review is positive' "
-          f"(selectivity {truth.mean():.2f})")
+def fresh_oracle(ds, q, seed=7):
+    return SyntheticOracle(ds.labels[q], flip_prob=0.02, seed=seed,
+                           token_lens=ds.token_lens)
 
-    oracle = SyntheticOracle(truth, flip_prob=0.02, seed=7,
-                             token_lens=ds.token_lens)
-    ref = reference_filter(len(table), oracle)
+
+def main():
+    print("== CSV semantic filter quickstart (repro.api) ==")
+    ds = make_dataset("imdb_review", n=4000, seed=0)
+    truth = ds.labels["RV-Q1"]
+
+    sess = Session(policy=ExecutionPolicy(n_clusters=4, xi=0.005))
+    reviews = sess.table(texts=ds.texts, embeddings=ds.embeddings,
+                         name="reviews")
+    print(f"table: {len(reviews)} tuples; predicate: 'the review is "
+          f"positive' (selectivity {truth.mean():.2f})")
+
+    # --- linear reference baseline through the same entry point ---
+    ref = reviews.filter(fresh_oracle(ds, "RV-Q1"), name="positive").collect(
+        sess.policy.replace(method="reference"))
     acc, f1 = accuracy_f1(ref.mask, truth)
-    print(f"\nReference (linear scan): {ref.n_oracle_calls} LLM calls, "
+    print(f"\nreference: {ref.n_llm_calls} LLM calls (linear scan), "
           f"acc={acc:.4f} f1={f1:.4f}")
 
+    # --- CSV with UniVote and SimVote ---
     for method in ["csv", "csv-sim"]:
-        oracle = SyntheticOracle(truth, flip_prob=0.02, seed=7,
-                                 token_lens=ds.token_lens)
-        r = table.sem_filter(oracle, method=method,
-                             cfg=CSVConfig(n_clusters=4, xi=0.005))
+        r = reviews.filter(fresh_oracle(ds, "RV-Q1"), name="positive") \
+                   .collect(sess.policy.replace(method=method))
         acc, f1 = accuracy_f1(r.mask, truth)
+        fr = r.raw.results["positive"]
         print(f"{method:8s}: {r.n_llm_calls} LLM calls "
-              f"({len(table)/r.n_llm_calls:.1f}x fewer), "
-              f"{r.n_voted} voted, {r.n_fallback} fallback, "
+              f"({len(reviews)/r.n_llm_calls:.1f}x fewer), "
+              f"{fr.n_voted} voted, {fr.n_fallback} fallback, "
               f"acc={acc:.4f} f1={f1:.4f}, "
-              f"recluster_time={r.recluster_time_s*1e3:.0f}ms")
+              f"recluster_time={fr.recluster_time_s*1e3:.0f}ms")
+
+    # --- lazy composition + explain: zero oracle calls until collect ---
+    print("\n-- composed query: positive AND mentions-acting "
+          "(cost-ordered cascade) --")
+    q = (reviews.filter(fresh_oracle(ds, "RV-Q1"), name="positive")
+         & reviews.filter(fresh_oracle(ds, "RV-Q3"), name="mentions_acting"))
+    print(q.explain())
+    r = q.collect()
+    truth_and = ds.labels["RV-Q1"] & ds.labels["RV-Q3"]
+    acc, f1 = accuracy_f1(r.mask, truth_and)
+    print(f"collected: {r.n_llm_calls} LLM calls "
+          f"(pilot {r.pilot_calls}), order={r.order}, "
+          f"acc={acc:.4f} f1={f1:.4f}")
+
+    print(f"\nsession totals: {sess.stats.n_calls} oracle calls, "
+          f"{sess.stats.input_tokens} input tokens, "
+          f"mean oracle batch {sess.stats.mean_batch_size:.1f}")
 
 
 if __name__ == "__main__":

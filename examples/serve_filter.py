@@ -9,10 +9,9 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import numpy as np
 
+from repro.api import ExecutionPolicy, Session
 from repro.configs import smoke_config
-from repro.core import CSVConfig, SemanticTable
 from repro.core.oracle import ModelOracle
 from repro.data import make_dataset
 from repro.data.tokenizer import HashTokenizer
@@ -37,9 +36,10 @@ def main():
     emb = encoder.encode(ds.texts)
     print(f"embedded {len(ds.texts)} tuples -> {emb.shape}")
 
-    table = SemanticTable(texts=ds.texts, embeddings=emb)
-    r = table.sem_filter(oracle, method="csv",
-                         cfg=CSVConfig(n_clusters=4, min_sample=25))
+    sess = Session(engine=engine)
+    table = sess.table(texts=ds.texts, embeddings=emb, name="reviews")
+    r = table.filter(oracle, name="positive").collect(
+        ExecutionPolicy(method="csv", n_clusters=4, min_sample=25))
     print(f"CSV: {r.n_llm_calls} LLM invocations for {len(ds.texts)} tuples "
           f"({len(ds.texts)/max(1,r.n_llm_calls):.1f}x reduction)")
     print(f"engine stats: {engine.stats}")

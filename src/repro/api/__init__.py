@@ -1,0 +1,29 @@
+"""repro.api — the canonical declarative entry point (lazy Session/Query).
+
+    from repro.api import ExecutionPolicy, Session
+
+    sess = Session(policy=ExecutionPolicy(n_clusters=4, xi=0.005))
+    reviews = sess.table(texts=..., embeddings=..., name="reviews")
+
+    q = reviews.filter("is positive", oracle) & ~reviews.filter("spam", o2)
+    print(q.explain())          # optimizer order + est_oracle_calls per node
+    r = q.collect()             # the ONLY step that spends oracle calls
+    r.mask, r.n_llm_calls, sess.stats
+
+Filters, expression cascades, joins, and the linear baselines
+(reference/lotus/bargain) all route through the same two calls —
+``.explain()`` / ``.collect()`` — under one ``ExecutionPolicy``.  The legacy
+``SemanticTable.sem_filter*``/``sem_join`` methods are deprecated shims over
+this layer.  See docs/api.md.
+"""
+from repro.api.policy import (BASELINE_METHODS, EXECUTORS, METHODS,
+                              ExecutionPolicy, OracleBudgetError)
+from repro.api.query import Explain, FilterQuery, JoinQuery, Query, QueryResult
+from repro.api.session import Session, TableHandle
+
+__all__ = [
+    "BASELINE_METHODS", "EXECUTORS", "METHODS",
+    "ExecutionPolicy", "OracleBudgetError",
+    "Explain", "FilterQuery", "JoinQuery", "Query", "QueryResult",
+    "Session", "TableHandle",
+]

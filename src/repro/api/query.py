@@ -1,0 +1,400 @@
+"""Lazy queries: logical plans that touch the oracle only at ``.collect()``.
+
+``TableHandle.filter(...)`` and ``.join(...)`` return query objects holding
+a *logical* description — a ``repro.plan`` expression (or a join predicate)
+plus an optional ``ExecutionPolicy``.  Building, composing (``&``/``|``/
+``~``), and ``.explain()``-ing queries issues zero semantic-filter oracle
+calls beyond the optimizer's pilot; ``.collect()`` lowers to the existing
+``PlanExecutor`` / ``sem_join`` / baseline machinery and returns a unified
+``QueryResult``.
+
+Explain/collect contract: ``.explain()`` runs the SAME pilot (same RNG
+derivation) the collect-time optimizer would, caches the ``PreparedPlan``
+on the query, and ``.collect()`` reuses it.  Pilot calls are memoized by
+the oracle, so a collect preceded by explain consumes the flip-RNG stream
+and reports the same call counts as a cold collect — bit-identity is
+asserted in tests/test_api.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.api.policy import ExecutionPolicy, OracleBudgetError
+from repro.core.baselines import (BaselineResult, bargain_filter,
+                                  lotus_filter, reference_filter)
+from repro.plan.cost import est_oracle_calls
+from repro.plan.executor import PlanExecutor, PlanResult, PreparedPlan
+from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
+from repro.plan.join import JoinResult, sem_join
+from repro.plan.optimizer import NodeEstimate, node_estimates
+
+
+# ------------------------------------------------------------------ results
+@dataclasses.dataclass
+class QueryResult:
+    """Unified outcome of ``Query.collect()`` across all five methods and
+    joins.  ``raw`` keeps the underlying result object (``PlanResult``,
+    ``BaselineResult``, or ``JoinResult``) for path-specific detail."""
+    kind: str                      # "filter" | "baseline" | "join"
+    n_llm_calls: int               # oracle calls, pilot included
+    pilot_calls: int
+    n_proxy_calls: int
+    input_tokens: int
+    output_tokens: int
+    order: list                    # executed leaf order (filters)
+    node_log: list                 # per-leaf NodeRecord (plan path)
+    round_log: Dict[str, list]     # per-leaf driver round logs
+    total_time_s: float
+    policy: ExecutionPolicy
+    raw: Any
+    mask: Optional[np.ndarray] = None       # filters/baselines
+    pair_mask: Optional[np.ndarray] = None  # joins
+
+    @property
+    def pairs(self) -> np.ndarray:
+        if self.pair_mask is None:
+            raise ValueError("pairs are only defined for join queries")
+        return np.argwhere(self.pair_mask)
+
+
+@dataclasses.dataclass
+class Explain:
+    """Rendered optimizer choice + per-node cost predictions (no cascade
+    execution; the only oracle spend is the memoized pilot)."""
+    kind: str
+    method: str
+    table: str
+    n: int
+    order: list
+    naive_order: list
+    nodes: list                    # NodeEstimate per leaf, physical order
+    est_oracle_calls: float        # nodes + pilot
+    pilot_calls: int
+    estimate: Any                  # PlanEstimate | None
+    text: str
+
+    def __str__(self) -> str:
+        return self.text
+
+
+def _render_explain(ex: Explain, policy: ExecutionPolicy) -> str:
+    lines = [f"Query({ex.kind}) on table {ex.table!r} (n={ex.n})  "
+             f"method={ex.method} executor={policy.executor} "
+             f"pipeline_depth={policy.pipeline_depth}"]
+    if ex.order:
+        lines.append("physical order: " + " -> ".join(ex.order)
+                      + ("" if ex.order == ex.naive_order
+                         else "   (naive: " + " -> ".join(ex.naive_order) + ")"))
+    for nd in ex.nodes:
+        sel = ("sel~?" if nd.selectivity is None
+               else f"sel~{nd.selectivity:.2f}")
+        lines.append(f"  {nd.name:<16s} est_in={nd.est_live_in:>8.0f}  "
+                     f"est_oracle_calls={nd.est_calls:>8.0f}  {sel}")
+    tail = f"est total {ex.est_oracle_calls:.0f} oracle calls"
+    if ex.pilot_calls:
+        tail += f" (incl. {ex.pilot_calls} pilot)"
+    if ex.estimate is not None:
+        tail += f"; naive order est {ex.estimate.est_calls_naive:.0f}"
+    lines.append(tail)
+    return "\n".join(lines)
+
+
+def _snapshot(oracles: list) -> list:
+    """(oracle, stats-clone) pairs for run-level accounting deltas."""
+    return [(o, o.stats.clone()) for o in oracles
+            if hasattr(o, "stats") and hasattr(o.stats, "clone")]
+
+
+class Query:
+    """Shared policy-resolution logic for filter and join queries."""
+
+    def __init__(self, session, policy: Optional[ExecutionPolicy]):
+        self.session = session
+        self.policy = policy
+
+    def _resolve(self, override: Optional[ExecutionPolicy]) -> ExecutionPolicy:
+        pol = override or self.policy or self.session.policy
+        if not isinstance(pol, ExecutionPolicy):
+            raise TypeError(f"expected ExecutionPolicy, got {type(pol).__name__}")
+        return pol
+
+    def _check_budget(self, pol: ExecutionPolicy, est: float) -> None:
+        if pol.max_oracle_calls is not None and est > pol.max_oracle_calls:
+            raise OracleBudgetError(
+                f"estimated {est:.0f} oracle calls exceed the policy budget "
+                f"of {pol.max_oracle_calls} (closed-form pre-flight check; "
+                "raise max_oracle_calls or shrink the query)")
+
+
+class FilterQuery(Query):
+    """A lazy semantic filter over one table.
+
+    ``expr`` is a ``repro.plan`` expression; composition with ``&``/``|``/
+    ``~`` builds a bigger logical plan (same table required) without any
+    execution.  ``collect()`` routes on the resolved policy's ``method``:
+    csv/csv-sim lower through ``PlanExecutor`` (cost-ordered short-circuit
+    cascades), the three linear baselines call the corresponding
+    ``repro.core.baselines`` function on the single leaf's oracle.
+    """
+
+    def __init__(self, session, handle, expr: Expr,
+                 policy: Optional[ExecutionPolicy] = None, proxy=None):
+        super().__init__(session, policy)
+        if not isinstance(expr, Expr):
+            raise TypeError(f"expected a plan Expr, got {type(expr).__name__}")
+        self.handle = handle
+        self.expr = expr
+        self.proxy = proxy
+        # pilot probes keyed by (seed, pilot_size) — the only policy knobs
+        # that change which ids the pilot draws; see _prepare()
+        self._pilot_cache: Dict[tuple, Dict] = {}
+
+    # ------------------------------------------------------- composition
+    def _combine(self, op, other: "FilterQuery") -> "FilterQuery":
+        if not isinstance(other, FilterQuery):
+            raise TypeError(f"cannot combine FilterQuery with "
+                            f"{type(other).__name__}")
+        if other.handle is not self.handle:
+            raise ValueError("combined queries must target the same table "
+                             f"({self.handle.name!r} vs {other.handle.name!r})")
+        if (self.policy is not None and other.policy is not None
+                and self.policy != other.policy):
+            raise ValueError(
+                "combined queries carry conflicting ExecutionPolicies; "
+                "drop one or pass the policy to collect() instead")
+        if (self.proxy is not None and other.proxy is not None
+                and self.proxy is not other.proxy):
+            raise ValueError("combined queries carry two different proxies")
+        return FilterQuery(self.session, self.handle,
+                           op(self.expr, other.expr),
+                           policy=self.policy or other.policy,
+                           proxy=self.proxy or other.proxy)
+
+    def __and__(self, other: "FilterQuery") -> "FilterQuery":
+        return self._combine(And, other)
+
+    def __or__(self, other: "FilterQuery") -> "FilterQuery":
+        return self._combine(Or, other)
+
+    def __invert__(self) -> "FilterQuery":
+        return FilterQuery(self.session, self.handle, Not(self.expr),
+                           policy=self.policy, proxy=self.proxy)
+
+    # -------------------------------------------------------- validation
+    def _validate(self, pol: ExecutionPolicy) -> None:
+        if pol.is_baseline:
+            leaves = self.expr.leaves()
+            if not isinstance(self.expr, Pred):
+                raise ValueError(
+                    f"method {pol.method!r} is a linear baseline and only "
+                    f"supports a single bare predicate; this query composes "
+                    f"{len(leaves)} leaves — use method='csv' or 'csv-sim'")
+            if pol.method in ("lotus", "bargain") and self.proxy is None:
+                raise ValueError(f"method {pol.method!r} requires a proxy "
+                                 "model (pass proxy= to .filter())")
+
+    def _worst_case_calls(self, pol: ExecutionPolicy) -> float:
+        """Closed-form worst case (no live-set shrinkage), zero oracle
+        calls: per-leaf first-round estimate at full n, plus the pilot."""
+        n = len(self.handle)
+        if pol.is_baseline:
+            return float(n)
+        cfg = pol.to_csv_config()
+        leaves = self.expr.leaves()
+        est = sum(est_oracle_calls(
+            n, leaf.cfg if leaf.cfg is not None else cfg) for leaf in leaves)
+        if pol.optimize and len(leaves) > 1:
+            est += pol.pilot_size * len({leaf.name for leaf in leaves})
+        return est
+
+    # --------------------------------------------------------- planning
+    def _executor(self, pol: ExecutionPolicy) -> PlanExecutor:
+        return PlanExecutor(self.handle, cfg=pol.to_csv_config(),
+                            optimize=pol.optimize, pilot_size=pol.pilot_size,
+                            reuse_clustering=pol.reuse_clustering)
+
+    def _prepare(self, pol: ExecutionPolicy) -> PreparedPlan:
+        """Plan (pilot + cost-ordering) under ``pol``.
+
+        The pilot probe is cached by (seed, pilot_size) — the only knobs
+        that change which ids it draws — so explain -> collect pays it
+        exactly once even when the two resolve different policies; only the
+        host-side cost-ordering is redone per policy.  Pilot oracle deltas
+        are absorbed into the session aggregate HERE (collect's own
+        snapshot window sees only the cascade)."""
+        ex = self._executor(pol)
+        if not (pol.optimize and needs_ordering(self.expr)):
+            return ex.prepare(self.expr)
+        key = (pol.seed, pol.pilot_size)
+        pilot_stats = self._pilot_cache.get(key)
+        if pilot_stats is None:
+            snap = _snapshot(self._oracles())
+            pilot_stats = ex.pilot(self.expr)
+            for oracle, before in snap:
+                self.session._absorb(oracle.stats.delta(before))
+            self._pilot_cache[key] = pilot_stats
+        return ex.prepare(self.expr, pilot_stats=pilot_stats)
+
+    def _oracles(self) -> list:
+        """Distinct leaf oracles (LLM spend only; the proxy is accounted
+        separately in ``session.proxy_stats``)."""
+        return list({id(leaf.oracle): leaf.oracle
+                     for leaf in self.expr.leaves()}.values())
+
+    def explain(self, policy: Optional[ExecutionPolicy] = None) -> Explain:
+        """Render the optimizer's chosen ordering with pilot-based
+        ``est_oracle_calls`` per node.  Pilot calls are memoized, so a
+        subsequent ``.collect()`` is bit-identical to one without explain."""
+        pol = self._resolve(policy)
+        self._validate(pol)
+        n = len(self.handle)
+        if pol.is_baseline:
+            name = self.expr.leaves()[0].name
+            nodes = [NodeEstimate(name=name, est_live_in=float(n),
+                                  est_calls=float(n), selectivity=None)]
+            ex = Explain(kind="filter", method=pol.method,
+                         table=self.handle.name, n=n, order=[name],
+                         naive_order=[name], nodes=nodes,
+                         est_oracle_calls=float(n), pilot_calls=0,
+                         estimate=None, text="")
+            ex.text = _render_explain(ex, pol)
+            return ex
+        prepared = self._prepare(pol)
+        nodes = node_estimates(prepared.physical, n, prepared.pilot_stats,
+                               pol.to_csv_config())
+        pilot_calls = sum(s.pilot_calls
+                          for s in prepared.pilot_stats.values())
+        ex = Explain(kind="filter", method=pol.method, table=self.handle.name,
+                     n=n, order=[p.name for p in prepared.physical.leaves()],
+                     naive_order=[p.name for p in self.expr.leaves()],
+                     nodes=nodes,
+                     est_oracle_calls=sum(nd.est_calls for nd in nodes)
+                     + pilot_calls,
+                     pilot_calls=pilot_calls, estimate=prepared.estimate,
+                     text="")
+        ex.text = _render_explain(ex, pol)
+        return ex
+
+    # -------------------------------------------------------- execution
+    def collect(self, policy: Optional[ExecutionPolicy] = None) -> QueryResult:
+        pol = self._resolve(policy)
+        self._validate(pol)
+        self._check_budget(pol, self._worst_case_calls(pol))
+        t0 = time.time()
+        # proxy spend is tracked separately (session.proxy_stats): proxy
+        # calls are the cheap cascade model, not LLM-oracle spend
+        proxy_snap = _snapshot([self.proxy] if self.proxy is not None else [])
+        if pol.is_baseline:
+            snap = _snapshot(self._oracles())
+            raw = self._run_baseline(pol, self.expr.leaves()[0].oracle)
+        else:
+            # plan first: _prepare absorbs any fresh pilot spend into the
+            # session aggregate, so the snapshot below covers the cascade
+            prepared = self._prepare(pol)
+            snap = _snapshot(self._oracles())
+            raw = self._executor(pol).run(self.expr, prepared=prepared)
+        for oracle, before in snap:
+            self.session._absorb(oracle.stats.delta(before))
+        for proxy, before in proxy_snap:
+            self.session._absorb_proxy(proxy.stats.delta(before))
+        return self._to_result(pol, raw, time.time() - t0)
+
+    def _run_baseline(self, pol: ExecutionPolicy, oracle) -> BaselineResult:
+        n = len(self.handle)
+        if pol.method == "reference":
+            return reference_filter(n, oracle)
+        fn = lotus_filter if pol.method == "lotus" else bargain_filter
+        return fn(n, self.proxy, oracle, **dict(pol.baseline))
+
+    def _to_result(self, pol, raw, dt: float) -> QueryResult:
+        if isinstance(raw, BaselineResult):
+            name = self.expr.leaves()[0].name
+            return QueryResult(
+                kind="baseline", mask=raw.mask,
+                n_llm_calls=raw.n_oracle_calls, pilot_calls=0,
+                n_proxy_calls=raw.n_proxy_calls,
+                input_tokens=raw.input_tokens,
+                output_tokens=raw.output_tokens, order=[name], node_log=[],
+                round_log={}, total_time_s=dt, policy=pol, raw=raw)
+        assert isinstance(raw, PlanResult)
+        return QueryResult(
+            kind="filter", mask=raw.mask, n_llm_calls=raw.n_llm_calls,
+            pilot_calls=raw.pilot_calls, n_proxy_calls=0,
+            input_tokens=raw.input_tokens, output_tokens=raw.output_tokens,
+            order=list(raw.order), node_log=list(raw.node_log),
+            round_log={name: fr.round_log for name, fr in raw.results.items()},
+            total_time_s=dt, policy=pol, raw=raw)
+
+
+class JoinQuery(Query):
+    """A lazy CSV-backed semantic join between two tables of one session."""
+
+    def __init__(self, session, left, right, oracle,
+                 policy: Optional[ExecutionPolicy] = None):
+        super().__init__(session, policy)
+        self.left = left
+        self.right = right
+        self.oracle = oracle
+
+    def _validate(self, pol: ExecutionPolicy) -> None:
+        if pol.method not in ("csv", "csv-sim"):
+            raise ValueError(
+                f"method {pol.method!r} is not supported for joins; the "
+                "CSV-backed join runs under 'csv' (UniVote) or 'csv-sim' "
+                "(SimVote pair embeddings)")
+
+    def _block_estimate(self, pol: ExecutionPolicy) -> float:
+        """First-round closed form: every cluster-pair block pays at least
+        one ``min_sample`` probe, capped by the total pair count."""
+        cfg = pol.to_join_config()
+        n_pairs = len(self.left) * len(self.right)
+        n_blocks = (min(cfg.n_clusters_left, len(self.left))
+                    * min(cfg.n_clusters_right, len(self.right)))
+        per = n_pairs / max(n_blocks, 1)
+        return float(min(n_pairs, n_blocks
+                         * max(cfg.min_sample, math.ceil(cfg.xi * per))))
+
+    def explain(self, policy: Optional[ExecutionPolicy] = None) -> Explain:
+        pol = self._resolve(policy)
+        self._validate(pol)
+        est = self._block_estimate(pol)
+        n_pairs = len(self.left) * len(self.right)
+        name = f"{self.left.name} JOIN {self.right.name}"
+        nodes = [NodeEstimate(name=name, est_live_in=float(n_pairs),
+                              est_calls=est, selectivity=None)]
+        ex = Explain(kind="join", method="csv-join", table=name, n=n_pairs,
+                     order=[name], naive_order=[name], nodes=nodes,
+                     est_oracle_calls=est, pilot_calls=0, estimate=None,
+                     text="")
+        ex.text = _render_explain(ex, pol)
+        return ex
+
+    def collect(self, policy: Optional[ExecutionPolicy] = None) -> QueryResult:
+        pol = self._resolve(policy)
+        self._validate(pol)
+        self._check_budget(pol, self._block_estimate(pol))
+        t0 = time.time()
+        cfg = pol.to_join_config()
+        assign_l = assign_r = None
+        if pol.reuse_clustering:
+            assign_l = self.left.precluster(cfg.n_clusters_left, cfg.seed)
+            assign_r = self.right.precluster(cfg.n_clusters_right, cfg.seed)
+        snap = _snapshot([self.oracle])
+        raw: JoinResult = sem_join(self.left.embeddings,
+                                   self.right.embeddings, self.oracle, cfg,
+                                   assign_left=assign_l,
+                                   assign_right=assign_r)
+        for oracle, before in snap:
+            self.session._absorb(oracle.stats.delta(before))
+        return QueryResult(
+            kind="join", pair_mask=raw.pair_mask,
+            n_llm_calls=raw.n_llm_calls, pilot_calls=0, n_proxy_calls=0,
+            input_tokens=raw.input_tokens, output_tokens=raw.output_tokens,
+            order=[f"{self.left.name} JOIN {self.right.name}"], node_log=[],
+            round_log={"join": raw.round_log},
+            total_time_s=time.time() - t0, policy=pol, raw=raw)

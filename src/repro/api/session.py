@@ -1,0 +1,215 @@
+"""Session: the shared-resource scope of the declarative query API.
+
+A ``Session`` owns everything that outlives a single query:
+
+- the **precluster cache**, keyed by ``(table id, n_clusters, seed)`` so two
+  tables in one session can never share a k-means assignment (the legacy
+  per-table cache was keyed by ``(n_clusters, seed)`` only, which was safe
+  per instance but impossible to share safely across tables);
+- an **oracle registry** (name -> oracle [+ proxy]) so queries can refer to
+  predicates declaratively by name;
+- a run-level **OracleStats** aggregate — every ``collect()`` folds its
+  per-oracle deltas (``BaseOracle.scope`` semantics) into ``session.stats``;
+- an optional default **embedder** applied to text-only tables, and an
+  optional ``ServingEngine`` for real-backbone oracles.
+
+``Session.table(...)`` returns a ``TableHandle`` whose ``.filter()`` /
+``.join()`` build lazy queries (see ``repro.api.query``).  Handles satisfy
+the ``PlanExecutor`` table protocol (``embeddings``, ``precluster``,
+``len``), so the plan layer runs on them unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.policy import ExecutionPolicy
+from repro.api.query import FilterQuery, JoinQuery
+from repro.core.oracle import OracleStats
+from repro.core.operators import SemanticTable
+from repro.plan.expr import Expr, Pred
+
+
+class TableHandle:
+    """A table registered in a session.  Cheap, immutable identity object:
+    the data lives in the wrapped ``SemanticTable``; clustering lives in the
+    session cache."""
+
+    def __init__(self, session: "Session", table: SemanticTable, name: str):
+        self.session = session
+        self.name = name
+        self._table = table
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def __repr__(self) -> str:
+        return f"TableHandle({self.name!r}, n={len(self)})"
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self._table.embeddings
+
+    @property
+    def texts(self):
+        return self._table.texts
+
+    def precluster(self, n_clusters: int, seed: int = 0) -> np.ndarray:
+        """Offline clustering via the session cache (PlanExecutor protocol)."""
+        return self.session._precluster(self, n_clusters, seed)
+
+    # ------------------------------------------------------------ queries
+    def filter(self, predicate, oracle=None, *, proxy=None,
+               policy: Optional[ExecutionPolicy] = None,
+               name: Optional[str] = None) -> FilterQuery:
+        """Build a lazy filter query (no oracle calls until ``collect``).
+
+        Accepted forms:
+        - ``filter(expr)`` — a ``repro.plan`` expression (``Pred``/``And``/
+          ``Or``/``Not``); each leaf carries its own oracle.
+        - ``filter("name", oracle)`` — single predicate bound inline.
+        - ``filter("name")`` — predicate looked up in the session's oracle
+          registry (``register_oracle``); a registered proxy rides along.
+        - ``filter(oracle, name="...")`` — bare oracle; the name defaults to
+          ``"<table>.p<k>"``.
+        """
+        if isinstance(predicate, Expr):
+            if oracle is not None:
+                raise TypeError("filter(expr) does not take a second oracle "
+                                "argument; bind oracles on the Pred leaves")
+            expr = predicate
+        elif isinstance(predicate, str):
+            if oracle is None:
+                oracle, reg_proxy = self.session._lookup_oracle(predicate)
+                proxy = proxy if proxy is not None else reg_proxy
+            expr = Pred(predicate, oracle)
+        elif callable(predicate) or hasattr(predicate, "stats"):
+            pred_name = name or self.session._anon_pred_name(self)
+            expr = Pred(pred_name, predicate)
+        else:
+            raise TypeError(
+                f"unsupported predicate {type(predicate).__name__}; expected "
+                "a plan Expr, a predicate name, or an oracle callable")
+        return FilterQuery(self.session, self, expr, policy=policy,
+                           proxy=proxy)
+
+    def join(self, right, oracle, *,
+             policy: Optional[ExecutionPolicy] = None) -> JoinQuery:
+        """Build a lazy semantic join against another table.
+
+        oracle: callable over flat pair ids ``i * len(right) + j`` (see
+        ``repro.plan.join.pair_ids``) with ``.stats`` accounting.
+        """
+        if isinstance(right, SemanticTable):
+            right = self.session.table(table=right)
+        if not isinstance(right, TableHandle):
+            raise TypeError(f"join target must be a TableHandle or "
+                            f"SemanticTable, got {type(right).__name__}")
+        if right.session is not self.session:
+            raise ValueError("join requires both tables in the same session")
+        return JoinQuery(self.session, self, right, oracle, policy=policy)
+
+
+class Session:
+    """Scope object for the lazy query API (the canonical entry point)."""
+
+    def __init__(self, policy: Optional[ExecutionPolicy] = None,
+                 embedder: Optional[Callable] = None, engine=None):
+        self.policy = policy or ExecutionPolicy()
+        self.embedder = embedder
+        self.engine = engine  # optional ServingEngine for ModelOracles
+        self.stats = OracleStats()        # LLM-oracle spend across collects
+        self.proxy_stats = OracleStats()  # cheap cascade-proxy spend, apart
+        self._tables: Dict[str, TableHandle] = {}
+        self._by_table_id: Dict[int, TableHandle] = {}
+        self._assign_cache: Dict[Tuple[str, int, int], np.ndarray] = {}
+        self._oracles: Dict[str, Tuple[Any, Any]] = {}
+        self._anon_tables = 0
+        self._anon_preds = 0
+
+    # -------------------------------------------------------------- tables
+    def table(self, texts: Optional[Sequence[str]] = None, embeddings=None,
+              embedder: Optional[Callable] = None,
+              name: Optional[str] = None,
+              table: Optional[SemanticTable] = None) -> TableHandle:
+        """Register a table and return its handle.
+
+        Either pass raw data (``texts``/``embeddings``/``embedder``) or wrap
+        an existing ``SemanticTable`` via ``table=``.  Wrapping the same
+        SemanticTable twice returns the existing handle.
+        """
+        if table is not None:
+            if texts is not None or embeddings is not None:
+                raise TypeError("pass either table= or texts=/embeddings=, "
+                                "not both")
+            existing = self._by_table_id.get(id(table))
+            if existing is not None:
+                if name is not None and name != existing.name:
+                    raise ValueError(
+                        f"table already registered as {existing.name!r}")
+                return existing
+        else:
+            table = SemanticTable(texts=texts, embeddings=embeddings,
+                                  embedder=embedder or self.embedder)
+        if name is None:
+            name = f"t{self._anon_tables}"
+            self._anon_tables += 1
+        if name in self._tables:
+            raise ValueError(f"table name {name!r} already registered")
+        handle = TableHandle(self, table, name)
+        self._tables[name] = handle
+        self._by_table_id[id(table)] = handle
+        return handle
+
+    def __getitem__(self, name: str) -> TableHandle:
+        return self._tables[name]
+
+    # ------------------------------------------------------------- oracles
+    def register_oracle(self, name: str, oracle, proxy=None) -> None:
+        """Bind a predicate name to an oracle (and optional baseline proxy)
+        so queries can say ``handle.filter("name")``."""
+        if name in self._oracles:
+            raise ValueError(f"oracle {name!r} already registered")
+        self._oracles[name] = (oracle, proxy)
+
+    def oracle(self, name: str):
+        return self._lookup_oracle(name)[0]
+
+    def _lookup_oracle(self, name: str) -> Tuple[Any, Any]:
+        try:
+            return self._oracles[name]
+        except KeyError:
+            raise KeyError(f"no oracle registered under {name!r}; call "
+                           "session.register_oracle(name, oracle) or pass "
+                           "the oracle to .filter() directly") from None
+
+    def _anon_pred_name(self, handle: TableHandle) -> str:
+        name = f"{handle.name}.p{self._anon_preds}"
+        self._anon_preds += 1
+        return name
+
+    # ---------------------------------------------------------- clustering
+    def _precluster(self, handle: TableHandle, n_clusters: int,
+                    seed: int) -> np.ndarray:
+        """Cross-table-safe precluster cache.
+
+        Keyed by (table name, k, seed) — table names are unique per session
+        (the session-visible table id), so two tables can never share an
+        assignment entry.  Computation delegates to the wrapped table's own
+        per-instance memoized ``precluster``: that second layer is what
+        keeps a SemanticTable shared with legacy call sites (deprecation
+        shims, direct ``sem_filter``) on one consistent assignment.
+        """
+        key = (handle.name, int(n_clusters), int(seed))
+        if key not in self._assign_cache:
+            self._assign_cache[key] = handle._table.precluster(
+                n_clusters, seed)
+        return self._assign_cache[key]
+
+    # ---------------------------------------------------------- accounting
+    def _absorb(self, delta: OracleStats) -> None:
+        self.stats.merge(delta)
+
+    def _absorb_proxy(self, delta: OracleStats) -> None:
+        self.proxy_stats.merge(delta)

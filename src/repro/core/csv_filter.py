@@ -398,10 +398,13 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         emb, oracle, cfg, rng, xi, result, decided, cluster_log, round_log,
         queue)
 
-    if subset is None:
-        assert decided.all(), "driver must decide every tuple"
-    else:
-        assert decided[subset].all(), "driver must decide every subset tuple"
+    # survives python -O: this postcondition guards the paper's completeness
+    # contract (every tuple decided), not a debug assumption
+    undecided = (~decided if subset is None else ~decided[subset])
+    if undecided.any():
+        raise RuntimeError(
+            f"driver left {int(undecided.sum())} tuple(s) undecided — "
+            "executor invariant violated")
     delta = oracle.stats.delta(stats_before)
     return FilterResult(
         mask=result,

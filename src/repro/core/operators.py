@@ -1,34 +1,46 @@
-"""Semantic-operator API: the user-facing declarative layer (Lotus-style).
+"""Semantic-operator API: the legacy user-facing layer (Lotus-style).
 
-``SemanticTable`` holds texts + (lazily computed) embeddings and exposes
-``sem_filter`` with selectable execution methods.  The planner derives the
-sample ratio from a user error tolerance via the paper's theorems and keeps
-per-predicate call caches (restart-safe, update-safe).
+``SemanticTable`` holds texts + (lazily computed) embeddings.  Its query
+methods — ``sem_filter``, ``sem_filter_expr``, ``sem_join`` — are now thin
+**deprecated shims** over the canonical lazy Session/Query API in
+``repro.api``: each call builds a one-shot query and collects it
+immediately, producing bit-identical masks and oracle call counts (asserted
+in tests/test_api.py).  New code should use ``repro.api.Session`` directly;
+see docs/api.md for the migration table.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.baselines import bargain_filter, lotus_filter, reference_filter
-from repro.core.csv_filter import CSVConfig, FilterResult, semantic_filter
+from repro.core.csv_filter import CSVConfig
+
+_FILTER_METHODS = ("csv", "csv-sim", "reference", "lotus", "bargain")
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (see docs/api.md)",
+                  DeprecationWarning, stacklevel=3)
 
 
 class SemanticTable:
     """A table of tuples with text payloads and a semantic-filter operator."""
 
-    def __init__(self, texts: Sequence[str] = None, embeddings=None,
-                 embedder: Callable = None):
-        assert texts is not None or embeddings is not None
+    def __init__(self, texts: Optional[Sequence[str]] = None, embeddings=None,
+                 embedder: Optional[Callable] = None):
+        if texts is None and embeddings is None:
+            raise ValueError("SemanticTable needs texts and/or embeddings")
         self.texts = list(texts) if texts is not None else None
         self._embeddings = (np.asarray(embeddings, np.float32)
                             if embeddings is not None else None)
         self._embedder = embedder
-        # keyed by (n_clusters, seed); shared by sem_filter, the plan
-        # executor's cascade subsets, and each side of a semantic join
+        # legacy per-instance clustering cache keyed by (n_clusters, seed);
+        # the session layer keys its cache by (table id, n_clusters, seed)
+        # and delegates computation here, so both stay coherent
         self._assign_cache: dict[tuple[int, int], np.ndarray] = {}
+        self._api_handle = None  # lazily-created repro.api handle (shims)
 
     def __len__(self):
         if self.texts is not None:
@@ -38,7 +50,8 @@ class SemanticTable:
     @property
     def embeddings(self) -> np.ndarray:
         if self._embeddings is None:
-            assert self._embedder is not None, "no embeddings and no embedder"
+            if self._embedder is None:
+                raise ValueError("table has no embeddings and no embedder")
             self._embeddings = np.asarray(self._embedder(self.texts), np.float32)
         return self._embeddings
 
@@ -54,77 +67,80 @@ class SemanticTable:
             self._assign_cache[key] = np.asarray(assign)
         return self._assign_cache[key]
 
+    def _handle(self):
+        """The session-layer handle backing the deprecation shims (one
+        private Session per table, created on first legacy call)."""
+        if self._api_handle is None:
+            from repro.api import Session
+            self._api_handle = Session().table(table=self)
+        return self._api_handle
+
     def sem_filter(self, oracle, method: str = "csv",
                    cfg: Optional[CSVConfig] = None, proxy=None,
                    reuse_clustering: bool = True,
                    executor: Optional[str] = None,
                    pipeline_depth: Optional[int] = None, **kw):
-        """Evaluate a semantic predicate.
+        """Deprecated: use ``repro.api.Session``.  Evaluate one predicate.
 
         method: "csv" (UniVote), "csv-sim" (SimVote), "reference",
                 "lotus", "bargain".
-        executor / pipeline_depth: physical-plan knobs forwarded to
-        ``CSVConfig`` — "round" (default) batches every live cluster's
-        sample into one oracle call per round and votes all clusters in one
-        segmented dispatch; pipeline_depth > 1 overlaps oracle prefill of
-        the next wave with voting of the current one.
+        executor / pipeline_depth: physical-plan knobs ("round" batches every
+        live cluster's sample into one oracle call per round; depth > 1
+        overlaps oracle prefill with voting).  Baseline ``**kw`` (e.g.
+        ``sample_size``) rides along unchanged.
         """
-        n = len(self)
-        if method == "reference":
-            return reference_filter(n, oracle)
-        if method == "lotus":
-            assert proxy is not None
-            return lotus_filter(n, proxy, oracle, **kw)
-        if method == "bargain":
-            assert proxy is not None
-            return bargain_filter(n, proxy, oracle, **kw)
-        cfg = cfg or CSVConfig()
-        if method == "csv-sim":
-            cfg = dataclasses.replace(cfg, vote="sim")
-        overrides = {}
+        _deprecated("SemanticTable.sem_filter",
+                    "Session.table(...).filter(...).collect()")
+        if method not in _FILTER_METHODS:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"expected one of {_FILTER_METHODS}")
+        if method in ("lotus", "bargain") and proxy is None:
+            raise ValueError(f"method {method!r} requires a proxy model")
+        from repro.api import ExecutionPolicy
+        pol = ExecutionPolicy.from_csv_config(
+            cfg or CSVConfig(), method=method,
+            reuse_clustering=reuse_clustering, baseline=dict(kw))
         if executor is not None:
-            overrides["executor"] = executor
+            pol = pol.replace(executor=executor)
         if pipeline_depth is not None:
-            overrides["pipeline_depth"] = pipeline_depth
-        if overrides:
-            cfg = dataclasses.replace(cfg, **overrides)
-        assign = (self.precluster(cfg.n_clusters, cfg.seed)
-                  if reuse_clustering else None)
-        return semantic_filter(self.embeddings, oracle, cfg,
-                               precomputed_assign=assign)
+            pol = pol.replace(pipeline_depth=pipeline_depth)
+        q = self._handle().filter(oracle, name="pred", proxy=proxy,
+                                  policy=pol)
+        res = q.collect()
+        if method in ("reference", "lotus", "bargain"):
+            return res.raw                    # BaselineResult, as before
+        return res.raw.results["pred"]        # the node's FilterResult
 
     def sem_filter_expr(self, expr, cfg: Optional[CSVConfig] = None,
                         optimize: bool = True, pilot_size: int = 32,
-                        reuse_clustering: bool = True, **kw):
-        """Evaluate a composed predicate expression (``repro.plan`` AST).
-
-        expr: ``Pred`` / ``And`` / ``Or`` / ``Not`` tree; each leaf carries
-        its own oracle.  Conjuncts/disjuncts are cost-ordered from a pilot
-        sample (``optimize=True``) and evaluated as a short-circuit cascade:
-        tuples decided by an earlier node are masked out of later CSV runs.
-        Returns a ``PlanResult``.
+                        reuse_clustering: bool = True):
+        """Deprecated: use ``Session.table(...).filter(expr)``.  Evaluate a
+        composed predicate expression (``repro.plan`` AST) as a cost-ordered
+        short-circuit cascade.  Returns a ``PlanResult``.
         """
-        from repro.plan.executor import PlanExecutor
-        return PlanExecutor(self, cfg=cfg, optimize=optimize,
-                            pilot_size=pilot_size,
-                            reuse_clustering=reuse_clustering, **kw).run(expr)
+        _deprecated("SemanticTable.sem_filter_expr",
+                    "Session.table(...).filter(expr).collect()")
+        from repro.api import ExecutionPolicy
+        pol = ExecutionPolicy.from_csv_config(
+            cfg or CSVConfig(), optimize=optimize, pilot_size=pilot_size,
+            reuse_clustering=reuse_clustering)
+        return self._handle().filter(expr, policy=pol).collect().raw
 
     def sem_join(self, right: "SemanticTable", oracle, cfg=None,
                  reuse_clustering: bool = True):
-        """CSV-backed semantic join against another table.
-
-        oracle: callable over *pair ids* ``i * len(right) + j`` (see
-        ``repro.plan.join.pair_ids``).  Both sides' offline clusterings come
-        from the tables' precluster caches.  Returns a ``JoinResult``.
+        """Deprecated: use ``Session.table(...).join(...)``.  CSV-backed
+        semantic join; oracle is called over *pair ids*
+        ``i * len(right) + j`` (see ``repro.plan.join.pair_ids``).  Returns
+        a ``JoinResult``.
         """
-        from repro.plan.join import JoinConfig, sem_join
-        cfg = cfg or JoinConfig()
-        assign_l = assign_r = None
-        if reuse_clustering:
-            assign_l = self.precluster(cfg.n_clusters_left, cfg.seed)
-            assign_r = right.precluster(cfg.n_clusters_right, cfg.seed)
-        return sem_join(self.embeddings, right.embeddings, oracle, cfg,
-                        assign_left=assign_l, assign_right=assign_r)
+        _deprecated("SemanticTable.sem_join",
+                    "Session.table(...).join(right, oracle).collect()")
+        from repro.api import ExecutionPolicy
+        from repro.plan.join import JoinConfig
+        pol = ExecutionPolicy.from_join_config(
+            cfg or JoinConfig(), reuse_clustering=reuse_clustering)
+        handle = self._handle()
+        return handle.join(right, oracle, policy=pol).collect().raw
 
 
 def accuracy_f1(pred: np.ndarray, truth: np.ndarray) -> tuple[float, float]:

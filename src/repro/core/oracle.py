@@ -45,6 +45,16 @@ class OracleStats:
             batch_sizes=self.batch_sizes[len(before.batch_sizes):],
         )
 
+    def merge(self, other: "OracleStats") -> "OracleStats":
+        """Fold another stats object (typically a delta) into this one —
+        the session-level run aggregate in ``repro.api``."""
+        self.n_calls += other.n_calls
+        self.n_cached += other.n_cached
+        self.input_tokens += other.input_tokens
+        self.output_tokens += other.output_tokens
+        self.batch_sizes.extend(other.batch_sizes)
+        return self
+
     @property
     def mean_batch_size(self) -> float:
         return (float(np.mean(self.batch_sizes))
@@ -179,7 +189,8 @@ class ModelOracle(BaseOracle):
     """
 
     def __init__(self, engine, tokenizer, predicate: str,
-                 texts: Sequence[str], yes_id: int = None, no_id: int = None,
+                 texts: Sequence[str], yes_id: Optional[int] = None,
+                 no_id: Optional[int] = None,
                  instruction: str = "Answer yes or no: does the text satisfy "
                                     "the condition?"):
         super().__init__()

@@ -12,16 +12,18 @@ Operator-layer entry points: ``SemanticTable.sem_filter_expr(expr)`` and
 """
 from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
 from repro.plan.cost import PredStats, est_oracle_calls, pilot_predicates
-from repro.plan.optimizer import PlanEstimate, optimize
-from repro.plan.executor import NodeRecord, PlanExecutor, PlanResult
+from repro.plan.optimizer import (NodeEstimate, PlanEstimate, node_estimates,
+                                  optimize)
+from repro.plan.executor import (NodeRecord, PlanExecutor, PlanResult,
+                                 PreparedPlan)
 from repro.plan.join import (JoinBlock, JoinConfig, JoinResult, JoinRound,
                              pair_ids, sem_join)
 
 __all__ = [
     "And", "Expr", "Not", "Or", "Pred", "needs_ordering",
     "PredStats", "est_oracle_calls", "pilot_predicates",
-    "PlanEstimate", "optimize",
-    "NodeRecord", "PlanExecutor", "PlanResult",
+    "NodeEstimate", "PlanEstimate", "node_estimates", "optimize",
+    "NodeRecord", "PlanExecutor", "PlanResult", "PreparedPlan",
     "JoinBlock", "JoinConfig", "JoinResult", "JoinRound",
     "pair_ids", "sem_join",
 ]

@@ -36,6 +36,22 @@ _PILOT_STREAM = 0x9E3779B9
 
 
 @dataclasses.dataclass
+class PreparedPlan:
+    """Output of the planning phase (``PlanExecutor.prepare``).
+
+    Splitting planning from execution lets ``repro.api``'s ``.explain()``
+    pay the pilot once and hand the SAME pilot statistics to the subsequent
+    ``.collect()``: the pilot's oracle calls are memoized, so a collect that
+    reuses a PreparedPlan consumes the flip-RNG stream exactly as a cold
+    run would (the cold run's own pilot replays the memo), and the reported
+    ``pilot_calls`` stay identical to the single-shot path.
+    """
+    physical: Expr                     # optimizer-ordered (or logical) tree
+    estimate: Optional[PlanEstimate]   # None when no ordering choice existed
+    pilot_stats: Dict[str, PredStats]
+
+
+@dataclasses.dataclass
 class NodeRecord:
     """One executed leaf: where it ran in the cascade and what it cost."""
     name: str
@@ -97,22 +113,50 @@ class PlanExecutor:
         self.reuse_clustering = reuse_clustering
         self.n = len(table)
 
-    def run(self, expr: Expr) -> PlanResult:
-        t0 = time.time()
+    def pilot(self, expr: Expr) -> Dict[str, PredStats]:
+        """Probe every unique leaf on the seed-derived pilot sample.  The
+        draw depends only on (cfg.seed, pilot_size, n) — callers may cache
+        the result under that key and re-plan with different cost-model
+        knobs without touching the oracle again."""
+        rng = np.random.default_rng([self.cfg.seed, _PILOT_STREAM])
+        return pilot_predicates(expr.leaves(), np.arange(self.n), rng,
+                                self.pilot_size)
+
+    def prepare(self, expr: Expr,
+                pilot_stats: Optional[Dict[str, PredStats]] = None
+                ) -> PreparedPlan:
+        """Planning phase only: pilot-sample and cost-order, no cascade run.
+
+        Pilot oracle calls are spent here (and memoized); execution through
+        ``run(expr, prepared=...)`` reuses them so planning + execution is
+        bit-identical — same masks, flip-stream consumption, and call
+        counts — to a single ``run(expr)``.  Pass ``pilot_stats`` to reuse
+        an earlier ``pilot()`` probe (same seed/pilot_size) and only redo
+        the host-side ordering.
+        """
         self._check_names(expr)
+        if self.optimize and needs_ordering(expr):
+            if pilot_stats is None:
+                pilot_stats = self.pilot(expr)
+            estimate = optimize(expr, self.n, pilot_stats, self.cfg)
+            return PreparedPlan(physical=estimate.ordered, estimate=estimate,
+                                pilot_stats=pilot_stats)
+        return PreparedPlan(physical=expr, estimate=None, pilot_stats={})
+
+    def run(self, expr: Expr,
+            prepared: Optional[PreparedPlan] = None) -> PlanResult:
+        t0 = time.time()
+        if prepared is None:
+            prepared = self.prepare(expr)
+        else:
+            self._check_names(expr)
         self._node_log: list = []
         self._results: Dict[str, FilterResult] = {}
         self._order: list = []
 
-        estimate: Optional[PlanEstimate] = None
-        pilot_stats: Dict[str, PredStats] = {}
-        physical = expr
-        if self.optimize and needs_ordering(expr):
-            rng = np.random.default_rng([self.cfg.seed, _PILOT_STREAM])
-            pilot_stats = pilot_predicates(expr.leaves(), np.arange(self.n),
-                                           rng, self.pilot_size)
-            estimate = optimize(expr, self.n, pilot_stats, self.cfg)
-            physical = estimate.ordered
+        estimate = prepared.estimate
+        pilot_stats = prepared.pilot_stats
+        physical = prepared.physical
 
         mask = self._eval(physical, np.arange(self.n))
 

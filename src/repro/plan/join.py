@@ -249,7 +249,9 @@ def sem_join(emb_left: np.ndarray, emb_right: np.ndarray, oracle,
             else:
                 blocks.extend(_split_block(b, el, er, cfg, depth))
 
-    assert decided.all(), "join must decide every pair"
+    if not decided.all():
+        raise RuntimeError(f"join left {int((~decided).sum())} pair(s) "
+                           "undecided — refinement invariant violated")
     delta = oracle.stats.delta(before)
     return JoinResult(
         pair_mask=mask, n_llm_calls=delta.n_calls,

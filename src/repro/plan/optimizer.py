@@ -123,6 +123,64 @@ def _lower(expr: Expr, n: float, stats, default_cfg) -> Expr:
     return _reorder_node(type(expr)(*kids), n, stats, default_cfg)
 
 
+@dataclasses.dataclass
+class NodeEstimate:
+    """Predicted economics of one leaf at its position in the cascade."""
+    name: str
+    est_live_in: float       # live tuples expected to reach this node
+    est_calls: float         # est_oracle_calls at that live-set size
+    selectivity: Optional[float]  # pilot estimate; None without a pilot
+
+
+def node_estimates(expr: Expr, n: float, stats: Dict[str, PredStats],
+                   default_cfg: CSVConfig) -> list:
+    """Per-leaf cost predictions for ``expr`` in its CURRENT child order.
+
+    The walk mirrors ``expected_cost``'s short-circuit survivor arithmetic;
+    leaves without pilot statistics assume selectivity 0.5 for survivor
+    propagation but report ``selectivity=None``.  Powers ``.explain()`` in
+    ``repro.api`` — pure arithmetic, zero oracle calls.
+    """
+    out: list = []
+
+    def sel_of(node: Expr) -> float:
+        if isinstance(node, Pred):
+            st = stats.get(node.name)
+            return st.selectivity if st is not None else 0.5
+        if isinstance(node, Not):
+            return 1.0 - sel_of(node.child)
+        sels = [sel_of(c) for c in node.children]
+        prod = 1.0
+        if isinstance(node, And):
+            for s in sels:
+                prod *= s
+            return prod
+        for s in sels:
+            prod *= (1.0 - s)
+        return 1.0 - prod
+
+    def walk(node: Expr, live: float) -> None:
+        if isinstance(node, Pred):
+            st = stats.get(node.name)
+            out.append(NodeEstimate(
+                name=node.name, est_live_in=float(live),
+                est_calls=est_oracle_calls(live, _leaf_cfg(node, default_cfg)),
+                selectivity=st.selectivity if st is not None else None))
+            return
+        if isinstance(node, Not):
+            walk(node.child, live)
+            return
+        conj = isinstance(node, And)
+        cur = float(live)
+        for c in node.children:
+            walk(c, cur)
+            s = sel_of(c)
+            cur *= s if conj else (1.0 - s)
+
+    walk(expr, float(n))
+    return out
+
+
 def optimize(expr: Expr, n: int, stats: Dict[str, PredStats],
              default_cfg: Optional[CSVConfig] = None) -> PlanEstimate:
     """Lower a logical expression to its cost-ordered physical form."""

@@ -1,0 +1,444 @@
+"""Lazy Session/Query API (repro.api): routing, laziness, and bit-identity.
+
+Hard contracts (ISSUE 3 acceptance criteria):
+1. every legacy call pattern — sem_filter csv / csv-sim / reference /
+   lotus / bargain, sem_filter_expr, sem_join — reproduces bit-identically
+   (mask AND oracle call count, fixed seed) through the new API, including
+   ``executor="round"`` vs ``"sequential"`` and ``pipeline_depth > 1``;
+2. building/composing a lazy query issues zero oracle calls before
+   ``.collect()``;
+3. ``.explain()`` reports pilot cost estimates without perturbing the
+   subsequent ``.collect()`` (flip-RNG stream and call counts unchanged);
+4. two tables in one session never share precluster assignments.
+
+Bit-identity here is asserted against the *direct* machinery
+(``semantic_filter`` / ``PlanExecutor`` / baseline functions / ``sem_join``)
+— not against the deprecated shims, which themselves route through the new
+layer.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (ExecutionPolicy, FilterQuery, OracleBudgetError,
+                       QueryResult, Session)
+from repro.core import CSVConfig, ProxyModel, SemanticTable, SyntheticOracle
+from repro.core.baselines import (bargain_filter, lotus_filter,
+                                  reference_filter)
+from repro.core.csv_filter import semantic_filter
+from repro.plan import And, JoinConfig, PlanExecutor, Pred, sem_join
+
+N = 1500
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _oracle(ds, q="RV-Q1", flip=0.02):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=7,
+                           token_lens=ds.token_lens)
+
+
+def _proxy(ds):
+    return ProxyModel(ds.labels["RV-Q1"], token_lens=ds.token_lens,
+                      quality=0.8, center=0.82, concentration=0.15)
+
+
+CFG = CSVConfig(n_clusters=4, xi=0.005)
+
+
+# --------------------------------------------------------------- laziness
+def test_building_queries_spends_zero_oracle_calls(ds):
+    sess = Session()
+    t = sess.table(texts=ds.texts, embeddings=ds.embeddings, name="reviews")
+    o1, o2 = _oracle(ds), _oracle(ds, "RV-Q3")
+    q = t.filter(o1, name="q1") & ~t.filter(o2, name="q3")
+    assert isinstance(q, FilterQuery)
+    jo = SyntheticOracle(np.zeros(len(ds.embeddings) ** 2 // N, dtype=bool))
+    t.join(sess.table(embeddings=ds.embeddings[:1], name="tiny"), jo)
+    assert o1.stats.n_calls == 0 and o2.stats.n_calls == 0
+    assert jo.stats.n_calls == 0
+    assert sess.stats.n_calls == 0
+
+
+def test_single_pred_explain_is_closed_form(ds):
+    """A bare Pred has a unique order: explain must not touch the oracle."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    ex = t.filter(o, name="q").explain()
+    assert o.stats.n_calls == 0
+    assert ex.pilot_calls == 0
+    assert ex.est_oracle_calls > 0
+    assert "est_oracle_calls" in str(ex)
+
+
+# ------------------------------------------------- bit-identity: filters
+@pytest.mark.parametrize("executor,depth", [("round", 1), ("round", 3),
+                                            ("sequential", 1)])
+def test_filter_csv_bit_identical(ds, executor, depth):
+    cfg = CSVConfig(n_clusters=4, xi=0.005, executor=executor,
+                    pipeline_depth=depth)
+    ref_table = SemanticTable(embeddings=ds.embeddings)
+    r_direct = semantic_filter(
+        ds.embeddings, _oracle(ds), cfg,
+        precomputed_assign=ref_table.precluster(cfg.n_clusters, cfg.seed))
+
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    r = t.filter(_oracle(ds), name="q").collect(
+        ExecutionPolicy(method="csv", n_clusters=4, xi=0.005,
+                        executor=executor, pipeline_depth=depth))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+    assert r.pilot_calls == 0
+    assert r.kind == "filter" and r.order == ["q"]
+
+
+def test_filter_csv_sim_bit_identical(ds):
+    cfg = CSVConfig(n_clusters=4, xi=0.005, vote="sim")
+    ref_table = SemanticTable(embeddings=ds.embeddings)
+    r_direct = semantic_filter(
+        ds.embeddings, _oracle(ds), cfg,
+        precomputed_assign=ref_table.precluster(cfg.n_clusters, cfg.seed))
+
+    t = Session().table(embeddings=ds.embeddings)
+    r = t.filter(_oracle(ds), name="q").collect(
+        ExecutionPolicy(method="csv-sim", n_clusters=4, xi=0.005))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+
+
+def test_baselines_bit_identical(ds):
+    n = len(ds.embeddings)
+    t = Session().table(embeddings=ds.embeddings)
+
+    r_direct = reference_filter(n, _oracle(ds))
+    r = t.filter(_oracle(ds), name="r").collect(
+        ExecutionPolicy(method="reference"))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_oracle_calls and r.kind == "baseline"
+
+    r_direct = lotus_filter(n, _proxy(ds), _oracle(ds), sample_size=150)
+    r = t.filter(_oracle(ds), name="l", proxy=_proxy(ds)).collect(
+        ExecutionPolicy(method="lotus", baseline={"sample_size": 150}))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_oracle_calls
+    assert r.n_proxy_calls == r_direct.n_proxy_calls == n
+
+    r_direct = bargain_filter(n, _proxy(ds), _oracle(ds))
+    r = t.filter(_oracle(ds), name="b", proxy=_proxy(ds)).collect(
+        ExecutionPolicy(method="bargain"))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_oracle_calls
+
+
+def test_session_stats_keep_proxy_spend_separate(ds):
+    """Proxy calls (the cheap cascade model) must not inflate the session's
+    LLM-oracle aggregate."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    r = t.filter(_oracle(ds), name="l", proxy=_proxy(ds)).collect(
+        ExecutionPolicy(method="lotus"))
+    assert sess.stats.n_calls == r.n_llm_calls
+    assert sess.proxy_stats.n_calls == r.n_proxy_calls == len(ds.embeddings)
+
+
+def test_expression_bit_identical_to_plan_executor(ds):
+    def expr():
+        return And(Pred("q1", _oracle(ds)), Pred("q3", _oracle(ds, "RV-Q3")))
+
+    table = SemanticTable(embeddings=ds.embeddings)
+    r_direct = PlanExecutor(table, cfg=CFG, optimize=True).run(expr())
+
+    t = Session().table(embeddings=ds.embeddings)
+    r = t.filter(expr()).collect(
+        ExecutionPolicy(n_clusters=4, xi=0.005, optimize=True))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+    assert r.pilot_calls == r_direct.pilot_calls > 0
+    assert r.order == r_direct.order
+    assert set(r.round_log) == {"q1", "q3"}
+
+
+def test_query_composition_matches_expression(ds):
+    """`&` on queries builds the same logical plan as the raw AST."""
+    t = Session().table(embeddings=ds.embeddings)
+    q = t.filter(_oracle(ds), name="q1") & t.filter(_oracle(ds, "RV-Q3"),
+                                                    name="q3")
+    assert [p.name for p in q.expr.leaves()] == ["q1", "q3"]
+
+    table = SemanticTable(embeddings=ds.embeddings)
+    r_direct = PlanExecutor(table, cfg=CFG, optimize=True).run(
+        And(Pred("q1", _oracle(ds)), Pred("q3", _oracle(ds, "RV-Q3"))))
+    r = q.collect(ExecutionPolicy(n_clusters=4, xi=0.005))
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+
+
+def test_join_bit_identical(ds):
+    nl, nr = 240, 300
+    el, er = ds.embeddings[:nl], ds.embeddings[-nr:]
+    pair_truth = np.outer(ds.labels["RV-Q1"][:nl],
+                          ds.labels["RV-Q2"][-nr:]).ravel()
+    jcfg = JoinConfig()
+    tl_, tr_ = SemanticTable(embeddings=el), SemanticTable(embeddings=er)
+    r_direct = sem_join(
+        el, er, SyntheticOracle(pair_truth, seed=3), jcfg,
+        assign_left=tl_.precluster(jcfg.n_clusters_left, jcfg.seed),
+        assign_right=tr_.precluster(jcfg.n_clusters_right, jcfg.seed))
+
+    sess = Session()
+    hl = sess.table(embeddings=el, name="L")
+    hr = sess.table(embeddings=er, name="R")
+    r = hl.join(hr, SyntheticOracle(pair_truth, seed=3)).collect()
+    assert (r.pair_mask == r_direct.pair_mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+    assert r.kind == "join"
+    assert (r.pairs == r_direct.pairs).all()
+
+
+def test_join_rejects_baseline_methods(ds):
+    sess = Session()
+    hl = sess.table(embeddings=ds.embeddings[:100], name="jl")
+    hr = sess.table(embeddings=ds.embeddings[:100], name="jr")
+    q = hl.join(hr, SyntheticOracle(np.zeros(100 * 100, dtype=bool)))
+    with pytest.raises(ValueError, match="not supported for joins"):
+        q.collect(ExecutionPolicy(method="reference"))
+    with pytest.raises(ValueError, match="not supported for joins"):
+        q.explain(ExecutionPolicy(method="lotus"))
+
+
+# -------------------------------------------- explain/collect interaction
+def test_explain_does_not_perturb_collect(ds):
+    """Explain pays the (memoized) pilot up front; the subsequent collect
+    must consume the flip-RNG stream and report call counts exactly as a
+    cold collect would."""
+    def build():
+        t = Session().table(embeddings=ds.embeddings)
+        return (t.filter(_oracle(ds), name="q1")
+                & t.filter(_oracle(ds, "RV-Q3"), name="q3")
+                & t.filter(_oracle(ds, "RV-Q2"), name="q2"))
+
+    r_cold = build().collect()
+    warm = build()
+    ex = warm.explain()
+    assert ex.pilot_calls > 0 and len(ex.nodes) == 3
+    assert ex.order[0] == "q3"  # most selective conjunct first
+    r_warm = warm.collect()
+    assert (r_cold.mask == r_warm.mask).all()
+    assert r_cold.n_llm_calls == r_warm.n_llm_calls
+    assert r_cold.pilot_calls == r_warm.pilot_calls == ex.pilot_calls
+
+
+def test_explain_pilot_is_absorbed_into_session_stats(ds):
+    """The pilot spent by explain() must show up in the run-level aggregate:
+    after explain + collect, session totals equal the query's reported
+    calls (pilot included) — same as a cold collect."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    q = (t.filter(_oracle(ds), name="q1")
+         & t.filter(_oracle(ds, "RV-Q3"), name="q3"))
+    q.explain()
+    assert sess.stats.n_calls > 0  # pilot absorbed at explain time
+    r = q.collect()
+    assert sess.stats.n_calls == r.n_llm_calls
+
+    cold_sess = Session()
+    tc = cold_sess.table(embeddings=ds.embeddings)
+    rc = (tc.filter(_oracle(ds), name="q1")
+          & tc.filter(_oracle(ds, "RV-Q3"), name="q3")).collect()
+    assert cold_sess.stats.n_calls == rc.n_llm_calls == r.n_llm_calls
+
+
+def test_collect_other_policy_after_explain_matches_cold(ds):
+    """Explain under one policy then collect under another (same seed /
+    pilot_size): the cached pilot probe is reused, so reported call counts
+    and masks match a cold collect under the second policy."""
+    pol = ExecutionPolicy(n_clusters=8, xi=0.005)
+
+    def build():
+        t = Session().table(embeddings=ds.embeddings)
+        return (t.filter(_oracle(ds), name="q1")
+                & t.filter(_oracle(ds, "RV-Q3"), name="q3"))
+
+    r_cold = build().collect(pol)
+    warm = build()
+    warm.explain()  # session-default policy, same seed/pilot_size
+    r_warm = warm.collect(pol)
+    assert (r_cold.mask == r_warm.mask).all()
+    assert r_cold.n_llm_calls == r_warm.n_llm_calls
+    assert r_cold.pilot_calls == r_warm.pilot_calls > 0
+
+
+def test_combining_conflicting_policies_rejected(ds):
+    t = Session().table(embeddings=ds.embeddings)
+    q1 = t.filter(_oracle(ds), name="q1",
+                  policy=ExecutionPolicy(xi=0.02))
+    q2 = t.filter(_oracle(ds, "RV-Q3"), name="q3",
+                  policy=ExecutionPolicy(method="csv-sim"))
+    with pytest.raises(ValueError, match="conflicting ExecutionPolicies"):
+        _ = q1 & q2
+    # one explicit policy (or two equal ones) composes fine
+    q3 = t.filter(_oracle(ds, "RV-Q3"), name="q3")
+    assert (q1 & q3).policy == q1.policy
+    q4 = t.filter(_oracle(ds, "RV-Q3"), name="q3",
+                  policy=ExecutionPolicy(xi=0.02))
+    assert (q1 & q4).policy == q1.policy
+
+
+def test_explain_estimates_decrease_down_the_cascade(ds):
+    t = Session().table(embeddings=ds.embeddings)
+    q = (t.filter(_oracle(ds), name="q1")
+         & t.filter(_oracle(ds, "RV-Q3"), name="q3"))
+    ex = q.explain()
+    lives = [nd.est_live_in for nd in ex.nodes]
+    assert lives[0] == len(ds.embeddings) and lives[1] < lives[0]
+    assert all(nd.selectivity is not None for nd in ex.nodes)
+
+
+# -------------------------------------------------- session-level state
+def test_two_tables_never_share_precluster_assignments(ds):
+    """Regression (ISSUE 3 satellite): the session cache is keyed by table
+    id, so same-(k, seed) clusterings of different tables stay distinct."""
+    rng = np.random.default_rng(0)
+    sess = Session()
+    a = sess.table(embeddings=ds.embeddings, name="a")
+    b = sess.table(embeddings=rng.normal(size=ds.embeddings.shape), name="b")
+    assign_a = a.precluster(4, seed=0)
+    assign_b = b.precluster(4, seed=0)
+    assert ("a", 4, 0) in sess._assign_cache
+    assert ("b", 4, 0) in sess._assign_cache
+    assert assign_a is not assign_b
+    assert not (assign_a == assign_b).all()
+    # and the cache actually caches: same object back on re-request
+    assert a.precluster(4, seed=0) is assign_a
+
+
+def test_session_stats_accumulate_across_collects(ds):
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    r1 = t.filter(_oracle(ds), name="q1").collect()
+    assert sess.stats.n_calls == r1.n_llm_calls
+    r2 = t.filter(_oracle(ds, "RV-Q3"), name="q3").collect()
+    assert sess.stats.n_calls == r1.n_llm_calls + r2.n_llm_calls
+    assert len(sess.stats.batch_sizes) > 0
+
+
+def test_oracle_registry_roundtrip(ds):
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    sess.register_oracle("positive", _oracle(ds), proxy=_proxy(ds))
+    q = t.filter("positive")
+    assert q.expr.name == "positive" and q.proxy is not None
+    with pytest.raises(ValueError, match="already registered"):
+        sess.register_oracle("positive", _oracle(ds))
+    with pytest.raises(KeyError, match="no oracle registered"):
+        t.filter("missing")
+
+
+def test_table_registration_rules(ds):
+    sess = Session()
+    st = SemanticTable(embeddings=ds.embeddings)
+    h1 = sess.table(table=st)
+    assert sess.table(table=st) is h1  # same object => same handle
+    with pytest.raises(ValueError, match="already registered"):
+        sess.table(table=st, name="other")
+    with pytest.raises(ValueError, match="already registered"):
+        sess.table(embeddings=ds.embeddings, name=h1.name)
+    assert sess[h1.name] is h1
+
+
+# ------------------------------------------------------------ validation
+def test_policy_and_query_validation(ds):
+    with pytest.raises(ValueError, match="unknown method"):
+        ExecutionPolicy(method="nope")
+    with pytest.raises(ValueError, match="unknown executor"):
+        ExecutionPolicy(executor="warp")
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ExecutionPolicy(pipeline_depth=0)
+
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings, name="a")
+    u = sess.table(embeddings=ds.embeddings, name="b")
+    with pytest.raises(ValueError, match="same table"):
+        _ = t.filter(_oracle(ds), name="x") & u.filter(_oracle(ds), name="y")
+    with pytest.raises(ValueError, match="requires a proxy"):
+        t.filter(_oracle(ds), name="x").collect(
+            ExecutionPolicy(method="lotus"))
+    with pytest.raises(ValueError, match="single bare predicate"):
+        (t.filter(_oracle(ds), name="x")
+         & t.filter(_oracle(ds, "RV-Q3"), name="y")).collect(
+            ExecutionPolicy(method="reference"))
+    with pytest.raises(TypeError):
+        t.filter(12345)
+
+
+def test_budget_guard_spends_nothing(ds):
+    t = Session().table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    with pytest.raises(OracleBudgetError, match="exceed"):
+        t.filter(o, name="q").collect(ExecutionPolicy(max_oracle_calls=5))
+    assert o.stats.n_calls == 0  # the guard is closed-form
+
+
+def test_argument_validation_survives_python_O(ds):
+    """Satellite: constructor/method misuse raises real exceptions."""
+    with pytest.raises(ValueError, match="texts and/or embeddings"):
+        SemanticTable()
+    with pytest.raises(ValueError, match="no embedder"):
+        SemanticTable(texts=["a", "b"]).embeddings
+    table = SemanticTable(embeddings=ds.embeddings)
+    with pytest.raises(ValueError, match="unknown method"):
+        table.sem_filter(_oracle(ds), method="nope")
+    with pytest.raises(ValueError, match="requires a proxy"):
+        table.sem_filter(_oracle(ds), method="lotus")
+
+
+# ------------------------------------------------------- legacy shims
+def test_legacy_sem_filter_warns_and_matches_direct(ds):
+    cfg = CSVConfig(n_clusters=4, xi=0.005)
+    ref_table = SemanticTable(embeddings=ds.embeddings)
+    r_direct = semantic_filter(
+        ds.embeddings, _oracle(ds), cfg,
+        precomputed_assign=ref_table.precluster(cfg.n_clusters, cfg.seed))
+
+    table = SemanticTable(embeddings=ds.embeddings)
+    with pytest.warns(DeprecationWarning, match="sem_filter"):
+        r = table.sem_filter(_oracle(ds), method="csv", cfg=cfg)
+    assert (r.mask == r_direct.mask).all()
+    assert r.n_llm_calls == r_direct.n_llm_calls
+    assert r.n_input == len(ds.embeddings)  # a genuine FilterResult
+
+
+def test_legacy_sem_filter_expr_warns(ds):
+    table = SemanticTable(embeddings=ds.embeddings)
+    with pytest.warns(DeprecationWarning, match="sem_filter_expr"):
+        r = table.sem_filter_expr(Pred("q1", _oracle(ds)), cfg=CFG)
+    assert r.pilot_calls == 0 and r.order == ["q1"]
+
+
+def test_legacy_sem_join_warns(ds):
+    nl, nr = 150, 180
+    pair_truth = np.outer(ds.labels["RV-Q1"][:nl],
+                          ds.labels["RV-Q2"][:nr]).ravel()
+    tl_ = SemanticTable(embeddings=ds.embeddings[:nl])
+    tr_ = SemanticTable(embeddings=ds.embeddings[:nr])
+    with pytest.warns(DeprecationWarning, match="sem_join"):
+        r = tl_.sem_join(tr_, SyntheticOracle(pair_truth, seed=3))
+    assert r.pair_mask.shape == (nl, nr)
+
+
+# ------------------------------------------------------- result surface
+def test_query_result_unified_fields(ds):
+    t = Session().table(embeddings=ds.embeddings)
+    r = t.filter(_oracle(ds), name="q").collect()
+    assert isinstance(r, QueryResult)
+    assert r.mask is not None and r.pair_mask is None
+    with pytest.raises(ValueError, match="join"):
+        _ = r.pairs
+    assert r.input_tokens > 0 and r.total_time_s >= 0
+    assert r.policy.method == "csv"
+    assert r.node_log[0].name == "q"
