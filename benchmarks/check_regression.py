@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""CI perf gate: fail when oracle call counts regress vs the baseline.
+
+Usage:
+    python benchmarks/check_regression.py benchmarks/baseline.json \
+        BENCH_pr.json [--tolerance 0.05]
+
+Compares the ``oracle_calls`` counter of every baseline case against the PR
+run (``benchmarks/run.py --quick --json BENCH_pr.json``) and exits non-zero
+when any case grew by more than ``--tolerance`` (default 5%).  Token counts
+are reported for context but do not gate (they track calls closely and
+double-gating produces noisy duplicates).  Cases present in the PR run but
+not in the baseline are listed as informational (new benchmarks start
+gating once the baseline is refreshed).
+
+Refreshing the baseline after an intentional efficiency change:
+    PYTHONPATH=src python benchmarks/run.py --quick --json benchmarks/baseline.json
+and commit the diff with a justification (docs/caching.md#ci-perf-gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, pr: dict, tolerance: float) -> int:
+    base_cases = baseline.get("cases", {})
+    pr_cases = pr.get("cases", {})
+    if not base_cases:
+        print("FAIL: baseline has no cases — refresh benchmarks/baseline.json")
+        return 1
+    failures = []
+    width = max(len(k) for k in base_cases)
+    print(f"{'case'.ljust(width)}  baseline       pr   delta")
+    for key in sorted(base_cases):
+        b = base_cases[key]["oracle_calls"]
+        if key not in pr_cases:
+            failures.append(f"{key}: missing from the PR run")
+            print(f"{key.ljust(width)}  {b:8d}  MISSING")
+            continue
+        p = pr_cases[key]["oracle_calls"]
+        delta = (p - b) / max(b, 1)
+        flag = ""
+        if p > b * (1.0 + tolerance):
+            failures.append(
+                f"{key}: oracle_calls {b} -> {p} ({delta:+.1%}, "
+                f"tolerance {tolerance:.0%})")
+            flag = "  << REGRESSION"
+        print(f"{key.ljust(width)}  {b:8d}  {p:7d}  {delta:+6.1%}{flag}")
+    for key in sorted(set(pr_cases) - set(base_cases)):
+        print(f"{key.ljust(width)}  (new case — not gated until the "
+              "baseline is refreshed)")
+    if failures:
+        print("\nFAIL: oracle call counts regressed:")
+        for f in failures:
+            print(f"  - {f}")
+        print("If intentional, refresh the baseline:\n"
+              "  PYTHONPATH=src python benchmarks/run.py --quick "
+              "--json benchmarks/baseline.json")
+        return 1
+    print("\nOK: no oracle-call regressions "
+          f"(tolerance {tolerance:.0%}, {len(base_cases)} cases)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("pr_run")
+    ap.add_argument("--tolerance", type=float, default=0.05)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.pr_run) as f:
+        pr = json.load(f)
+    sys.exit(compare(baseline, pr, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -9,23 +10,53 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 
+def _fig4_cases(rows) -> dict:
+    """Flatten bench_fig4_efficiency rows into the perf-gate JSON schema:
+    one entry per (dataset, query, method) keyed ``fig4/<ds>/<q>/<m>``,
+    holding the deterministic efficiency counters the CI gate compares."""
+    cases = {}
+    for ds_name, q, m, out in rows:
+        cases[f"fig4/{ds_name}/{q}/{m}"] = {
+            "oracle_calls": int(out["oracle_calls"]),
+            "proxy_calls": int(out["proxy_calls"]),
+            "tokens": int(out["tokens"]),
+        }
+    return cases
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale dataset sizes (slow on 1 CPU core)")
+    ap.add_argument("--quick", action="store_true",
+                    help="perf-smoke mode: only the Fig. 4 small cases "
+                         "(the CI perf gate; implies small sizes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the Fig. 4 call/token counters as JSON "
+                         "(see benchmarks/check_regression.py)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
-                         "fig6,appb,kernels,roofline,plan_order,api_overhead")
+                         "fig6,appb,kernels,roofline,plan_order,api_overhead,"
+                         "session_reuse")
     args = ap.parse_args()
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
+    if args.quick:
+        only = {"fig4"} if only is None else (only & {"fig4"})
+        if not only:
+            # an empty set is falsy and would disable filtering entirely
+            ap.error("--quick runs only the fig4 suite; the given --only "
+                     "list excludes it")
 
     from benchmarks import (bench_fig2_distance, bench_fig4_efficiency,
                             bench_table2_quality, bench_table3_hyperparams,
                             bench_table4_recluster, bench_table5_theory,
                             bench_fig6_synthetic, bench_appb_backbones,
                             bench_kernels, bench_plan_order,
-                            bench_api_overhead, roofline_report)
+                            bench_api_overhead, bench_session_reuse,
+                            roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
@@ -34,19 +65,34 @@ def main() -> None:
         ("fig6", bench_fig6_synthetic), ("appb", bench_appb_backbones),
         ("kernels", bench_kernels), ("plan_order", bench_plan_order),
         ("api_overhead", bench_api_overhead),
+        ("session_reuse", bench_session_reuse),
         ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")
+    json_cases: dict = {}
+    failed = False
     for name, mod in suites:
         if only and name not in only:
             continue
         t0 = time.time()
         try:
-            mod.main(small=small)
+            ret = mod.main(small=small)
+            if name == "fig4" and ret:
+                json_cases.update(_fig4_cases(ret))
             print(f"# suite {name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness running
+            failed = True
             print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}:{e}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "small": small, "cases": json_cases},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(json_cases)} cases to {args.json}",
+              file=sys.stderr)
+    if args.quick and (failed or not json_cases):
+        sys.exit(1)  # the perf gate must not pass on an empty/broken run
 
 
 if __name__ == "__main__":

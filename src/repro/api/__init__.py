@@ -16,14 +16,18 @@ Filters, expression cascades, joins, and the linear baselines
 ``SemanticTable.sem_filter*``/``sem_join`` methods are deprecated shims over
 this layer.  See docs/api.md.
 """
+from repro.api.memo import ReplayHit, ReuseView, SessionMemo
 from repro.api.policy import (BASELINE_METHODS, EXECUTORS, METHODS,
                               ExecutionPolicy, OracleBudgetError)
 from repro.api.query import Explain, FilterQuery, JoinQuery, Query, QueryResult
 from repro.api.session import Session, TableHandle
+from repro.embeddings.cache import CachingEmbedder, EmbeddingCache
 
 __all__ = [
     "BASELINE_METHODS", "EXECUTORS", "METHODS",
     "ExecutionPolicy", "OracleBudgetError",
     "Explain", "FilterQuery", "JoinQuery", "Query", "QueryResult",
     "Session", "TableHandle",
+    "ReplayHit", "ReuseView", "SessionMemo",
+    "CachingEmbedder", "EmbeddingCache",
 ]

@@ -73,6 +73,16 @@ class ExecutionPolicy:
     optimize: bool = True
     pilot_size: int = 32
     reuse_clustering: bool = True
+    # ---- session-level reuse (docs/caching.md) ----
+    # reuse_memo: replay memoized per-tuple decisions for a predicate the
+    # session has already evaluated on this table (zero oracle calls on an
+    # unchanged table; after append()/update() only dirty clusters re-vote).
+    # reuse_stats: plan later queries with memoized pilot probes and
+    # observed (post-run) selectivities instead of fresh pilot calls.
+    # Both are pure reuse: with an empty memo, behavior is bit-identical
+    # to a cold session.
+    reuse_memo: bool = True
+    reuse_stats: bool = True
     # ---- joins ----
     n_clusters_right: Optional[int] = None  # None -> n_clusters
     max_refine: int = 3

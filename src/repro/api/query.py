@@ -24,6 +24,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.api.memo import ReuseView
 from repro.api.policy import ExecutionPolicy, OracleBudgetError
 from repro.core.baselines import (BaselineResult, bargain_filter,
                                   lotus_filter, reference_filter)
@@ -54,6 +55,9 @@ class QueryResult:
     raw: Any
     mask: Optional[np.ndarray] = None       # filters/baselines
     pair_mask: Optional[np.ndarray] = None  # joins
+    # tuples decided by replaying session-memoized decisions (zero oracle
+    # cost; docs/caching.md) — 0 on cold runs and non-reuse paths
+    n_replayed: int = 0
 
     @property
     def pairs(self) -> np.ndarray:
@@ -198,25 +202,55 @@ class FilterQuery(Query):
                 raise ValueError(f"method {pol.method!r} requires a proxy "
                                  "model (pass proxy= to .filter())")
 
+    def _reuse_view(self, pol: ExecutionPolicy) -> Optional[ReuseView]:
+        """Session-memo binding for this query, or None when every reuse
+        knob is off (or the method is a linear baseline)."""
+        if pol.is_baseline or not (pol.reuse_memo or pol.reuse_stats):
+            return None
+        return ReuseView(self.session, self.handle,
+                         reuse_decisions=pol.reuse_memo,
+                         reuse_stats=pol.reuse_stats)
+
     def _worst_case_calls(self, pol: ExecutionPolicy) -> float:
         """Closed-form worst case (no live-set shrinkage), zero oracle
-        calls: per-leaf first-round estimate at full n, plus the pilot."""
+        calls: per-leaf first-round estimate at full n, plus the pilot.
+
+        Memo accounting: a leaf whose decisions replay from the session
+        memo is budgeted at its *dirty-subset* size (zero on an unchanged
+        table), and memoized pilot/observed statistics waive that leaf's
+        pilot charge — so a warm replay fits budgets a cold run would
+        blow."""
         n = len(self.handle)
         if pol.is_baseline:
             return float(n)
         cfg = pol.to_csv_config()
+        view = self._reuse_view(pol)
         leaves = self.expr.leaves()
-        est = sum(est_oracle_calls(
-            n, leaf.cfg if leaf.cfg is not None else cfg) for leaf in leaves)
+        est = 0.0
+        need_pilot = set()
+        for leaf in leaves:
+            lcfg = leaf.cfg if leaf.cfg is not None else cfg
+            hit = view.lookup(leaf, lcfg) if view is not None else None
+            if hit is not None:
+                est += est_oracle_calls(len(hit.rerun_rows), lcfg)
+            else:
+                est += est_oracle_calls(n, lcfg)
+            # the pilot charge is waived only when planning actually has
+            # memoized statistics for this leaf — a PARTIAL replay hit
+            # (post-mutation) still re-probes, so it still pays
+            if (view is None or view.pred_stats(leaf, lcfg, pol.seed,
+                                                pol.pilot_size) is None):
+                need_pilot.add(leaf.name)
         if pol.optimize and len(leaves) > 1:
-            est += pol.pilot_size * len({leaf.name for leaf in leaves})
+            est += pol.pilot_size * len(need_pilot)
         return est
 
     # --------------------------------------------------------- planning
     def _executor(self, pol: ExecutionPolicy) -> PlanExecutor:
         return PlanExecutor(self.handle, cfg=pol.to_csv_config(),
                             optimize=pol.optimize, pilot_size=pol.pilot_size,
-                            reuse_clustering=pol.reuse_clustering)
+                            reuse_clustering=pol.reuse_clustering,
+                            memo=self._reuse_view(pol))
 
     def _prepare(self, pol: ExecutionPolicy) -> PreparedPlan:
         """Plan (pilot + cost-ordering) under ``pol``.
@@ -226,17 +260,49 @@ class FilterQuery(Query):
         exactly once even when the two resolve different policies; only the
         host-side cost-ordering is redone per policy.  Pilot oracle deltas
         are absorbed into the session aggregate HERE (collect's own
-        snapshot window sees only the cascade)."""
+        snapshot window sees only the cascade).
+
+        Session-memo reuse: leaves with memoized statistics (a replayable
+        decision set, an observed selectivity, or a stored pilot probe at
+        this table version) skip the fresh probe; only unknown leaves are
+        piloted, and their fresh statistics are stored back into the memo
+        for later queries.  With an empty memo every leaf is probed —
+        bit-identical to a cold session."""
         ex = self._executor(pol)
         if not (pol.optimize and needs_ordering(self.expr)):
             return ex.prepare(self.expr)
-        key = (pol.seed, pol.pilot_size)
+        # the reuse knobs and the table version join the cache key:
+        # memo-derived stats (replayable leaves, observed selectivities)
+        # must never leak into a reuse-disabled prepare of the same query
+        # object, and stats planned before an append()/update() must not
+        # survive the mutation
+        key = (pol.seed, pol.pilot_size, pol.reuse_memo, pol.reuse_stats,
+               getattr(self.handle, "version", 0))
         pilot_stats = self._pilot_cache.get(key)
         if pilot_stats is None:
+            view = self._reuse_view(pol)
+            known: Dict[str, Any] = {}
+            leaf_by_name = {}
+            if view is not None:
+                cfg = pol.to_csv_config()
+                for leaf in self.expr.leaves():
+                    if leaf.name in known or leaf.name in leaf_by_name:
+                        continue
+                    leaf_by_name[leaf.name] = leaf
+                    ps = view.pred_stats(
+                        leaf, leaf.cfg if leaf.cfg is not None else cfg,
+                        pol.seed, pol.pilot_size)
+                    if ps is not None:
+                        known[leaf.name] = ps
             snap = _snapshot(self._oracles())
-            pilot_stats = ex.pilot(self.expr)
+            fresh = ex.pilot(self.expr, skip=known)
             for oracle, before in snap:
                 self.session._absorb(oracle.stats.delta(before))
+            if view is not None:
+                for name, ps in fresh.items():
+                    view.store_pilot(leaf_by_name[name], pol.seed,
+                                     pol.pilot_size, ps)
+            pilot_stats = {**known, **fresh}
             self._pilot_cache[key] = pilot_stats
         return ex.prepare(self.expr, pilot_stats=pilot_stats)
 
@@ -286,6 +352,13 @@ class FilterQuery(Query):
         self._validate(pol)
         self._check_budget(pol, self._worst_case_calls(pol))
         t0 = time.time()
+        # sight every leaf oracle as having touched this table EVEN when
+        # reuse is off: TableHandle.update() must be able to invalidate
+        # stale per-id oracle memos regardless of the policy the oracle was
+        # used under.  Sightings are weak — they never extend oracle
+        # lifetimes
+        for oracle in self._oracles():
+            self.session.memo.note_sighting(self.handle.name, oracle)
         # proxy spend is tracked separately (session.proxy_stats): proxy
         # calls are the cheap cascade model, not LLM-oracle spend
         proxy_snap = _snapshot([self.proxy] if self.proxy is not None else [])
@@ -328,7 +401,8 @@ class FilterQuery(Query):
             input_tokens=raw.input_tokens, output_tokens=raw.output_tokens,
             order=list(raw.order), node_log=list(raw.node_log),
             round_log={name: fr.round_log for name, fr in raw.results.items()},
-            total_time_s=dt, policy=pol, raw=raw)
+            total_time_s=dt, policy=pol, raw=raw,
+            n_replayed=sum(rec.n_replayed for rec in raw.node_log))
 
 
 class JoinQuery(Query):
@@ -379,6 +453,10 @@ class JoinQuery(Query):
         self._validate(pol)
         self._check_budget(pol, self._block_estimate(pol))
         t0 = time.time()
+        # pair-oracle sightings: mutations of either side must clear this
+        # oracle's memo outright (pair ids reindex; see docs/caching.md)
+        self.session.memo.note_pair_oracle(self.left.name, self.oracle)
+        self.session.memo.note_pair_oracle(self.right.name, self.oracle)
         cfg = pol.to_join_config()
         assign_l = assign_r = None
         if pol.reuse_clustering:

@@ -24,22 +24,34 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.memo import SessionMemo
 from repro.api.policy import ExecutionPolicy
 from repro.api.query import FilterQuery, JoinQuery
 from repro.core.oracle import OracleStats
 from repro.core.operators import SemanticTable
+from repro.embeddings.cache import CachingEmbedder, EmbeddingCache
 from repro.plan.expr import Expr, Pred
 
 
 class TableHandle:
-    """A table registered in a session.  Cheap, immutable identity object:
-    the data lives in the wrapped ``SemanticTable``; clustering lives in the
-    session cache."""
+    """A table registered in a session.  Cheap identity object: the data
+    lives in the wrapped ``SemanticTable``; clustering lives in the session
+    cache.  ``append``/``update`` mutate the table *incrementally*: new or
+    changed rows are embedded through the session's embedding cache,
+    assigned to the nearest existing centroid, and only the touched
+    clusters are marked dirty — the next ``collect`` of a memoized
+    predicate re-votes exactly those clusters (docs/caching.md).
+
+    ``version`` counts mutations; ``_dirty[(k, seed)][c]`` is the version
+    at which cluster ``c`` of that cached clustering last changed.
+    """
 
     def __init__(self, session: "Session", table: SemanticTable, name: str):
         self.session = session
         self.name = name
         self._table = table
+        self.version = 0
+        self._dirty: Dict[Tuple[int, int], np.ndarray] = {}
 
     def __len__(self) -> int:
         return len(self._table)
@@ -58,6 +70,81 @@ class TableHandle:
     def precluster(self, n_clusters: int, seed: int = 0) -> np.ndarray:
         """Offline clustering via the session cache (PlanExecutor protocol)."""
         return self.session._precluster(self, n_clusters, seed)
+
+    # ------------------------------------------------- incremental updates
+    def _resolve_embeddings(self, texts, embeddings) -> Optional[np.ndarray]:
+        """Rows to add/patch: given embeddings win; else embed texts through
+        the session cache (only while the table's embeddings are
+        materialized — a still-lazy table defers to its embedder)."""
+        if embeddings is not None:
+            return np.asarray(embeddings, np.float32)
+        if self._table._embeddings is None:
+            return None  # still lazy: the (caching) embedder runs later
+        embedder = self._table._embedder or self.session.embedder
+        if embedder is None:
+            raise ValueError(f"table {self.name!r} has materialized "
+                             "embeddings but no embedder; pass embeddings=")
+        if not (isinstance(embedder, CachingEmbedder)
+                and embedder.cache is self.session.embedding_cache):
+            # tables registered with embeddings= carry a raw embedder (the
+            # table() wrap only covers lazy-text tables) — route mutations
+            # through THIS session's cache regardless
+            embedder = CachingEmbedder(self.session.embedding_cache, embedder)
+        return np.asarray(embedder(list(texts)), np.float32)
+
+    def _apply_touched(self, touched: Dict) -> None:
+        """Fold a SemanticTable patch report into the session cache and the
+        per-cluster dirty versions (at the freshly bumped version)."""
+        for (k, seed), (assign, touched_clusters) in touched.items():
+            self.session._assign_cache[(self.name, k, seed)] = assign
+            dirty = self._dirty.setdefault(
+                (k, seed), np.full(k, self.version, dtype=np.int64))
+            dirty[touched_clusters] = self.version
+
+    def append(self, texts: Optional[Sequence[str]] = None,
+               embeddings=None) -> "TableHandle":
+        """Add rows without invalidating the precluster cache: new rows are
+        embedded through the session's embedding cache and assigned to the
+        nearest existing centroids; only the clusters that received rows
+        are marked dirty (memoized predicates re-vote exactly those).
+
+        Note: oracles index tuples by id — an oracle bound to this table
+        must cover the grown id range (synthetic oracles: build them over
+        the post-append labels).
+        """
+        if texts is None and embeddings is None:
+            raise TypeError("append needs texts= and/or embeddings=")
+        n_new = len(texts) if texts is not None else len(embeddings)
+        if n_new == 0:
+            return self  # no rows: don't bump the version for a no-op
+        new_emb = self._resolve_embeddings(texts, embeddings)
+        touched = self._table._append_rows(
+            list(texts) if texts is not None else None, new_emb)
+        self.version += 1
+        self._apply_touched(touched)
+        # growing a table reindexes pair ids of joins against it
+        self.session._clear_pair_oracles(self.name)
+        return self
+
+    def update(self, ids, texts: Optional[Sequence[str]] = None,
+               embeddings=None) -> "TableHandle":
+        """Replace rows in place (§3.1 update handling): changed rows are
+        re-embedded through the session cache and re-assigned to the
+        nearest centroid; their old and new clusters are marked dirty, and
+        every oracle the session has seen touch this table drops its per-id
+        memo entries for ``ids`` (the tuple content changed under them).
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        if len(ids) == 0:
+            return self
+        if texts is None and embeddings is None:
+            raise TypeError("update needs texts= and/or embeddings=")
+        new_emb = self._resolve_embeddings(texts, embeddings)
+        touched = self._table._update_rows(ids, texts, new_emb)
+        self.version += 1
+        self._apply_touched(touched)
+        self.session._invalidate_oracles(self.name, ids)
+        return self
 
     # ------------------------------------------------------------ queries
     def filter(self, predicate, oracle=None, *, proxy=None,
@@ -115,10 +202,20 @@ class Session:
     """Scope object for the lazy query API (the canonical entry point)."""
 
     def __init__(self, policy: Optional[ExecutionPolicy] = None,
-                 embedder: Optional[Callable] = None, engine=None):
+                 embedder: Optional[Callable] = None, engine=None,
+                 embedding_cache: Optional[EmbeddingCache] = None):
         self.policy = policy or ExecutionPolicy()
         self.embedder = embedder
         self.engine = engine  # optional ServingEngine for ModelOracles
+        # content-hash keyed embedding store: per-session by default; pass
+        # one cache to several sessions to share embeddings explicitly
+        # explicit None check: an empty cache is falsy (__len__ == 0), so
+        # ``or`` would silently drop a freshly shared cache
+        self.embedding_cache = (embedding_cache if embedding_cache is not None
+                                else EmbeddingCache())
+        # cross-query memo: decisions, pilot probes, observed selectivities
+        # (docs/caching.md; gated per query by ExecutionPolicy.reuse_*)
+        self.memo = SessionMemo()
         self.stats = OracleStats()        # LLM-oracle spend across collects
         self.proxy_stats = OracleStats()  # cheap cascade-proxy spend, apart
         self._tables: Dict[str, TableHandle] = {}
@@ -150,8 +247,13 @@ class Session:
                         f"table already registered as {existing.name!r}")
                 return existing
         else:
+            emb_fn = embedder or self.embedder
+            if emb_fn is not None and texts is not None:
+                # route lazy embedding through the session cache so
+                # overlapping/updated tables embed only genuinely new rows
+                emb_fn = CachingEmbedder(self.embedding_cache, emb_fn)
             table = SemanticTable(texts=texts, embeddings=embeddings,
-                                  embedder=embedder or self.embedder)
+                                  embedder=emb_fn)
         if name is None:
             name = f"t{self._anon_tables}"
             self._anon_tables += 1
@@ -203,9 +305,38 @@ class Session:
         """
         key = (handle.name, int(n_clusters), int(seed))
         if key not in self._assign_cache:
-            self._assign_cache[key] = handle._table.precluster(
-                n_clusters, seed)
+            assign, _ = handle._table.precluster_full(n_clusters, seed)
+            self._assign_cache[key] = assign
+            # per-cluster dirty versions start at the clustering's birth
+            # version: decisions memoized from here on see clean clusters
+            # until append()/update() touches them
+            handle._dirty.setdefault(
+                (int(n_clusters), int(seed)),
+                np.full(int(n_clusters), handle.version, dtype=np.int64))
         return self._assign_cache[key]
+
+    def _invalidate_oracles(self, table_name: str, ids: np.ndarray) -> None:
+        """Update-path invalidation: drop stale per-id oracle memo entries
+        for every oracle the session has seen touch ``table_name``.
+
+        Sightings only, NOT the whole registry: tuple ids are plain ints,
+        so invalidating a registered-but-unused oracle would drop its
+        already-paid decisions for the *other* table it actually ran on.
+        ``collect()`` registers every leaf oracle as a sighting even under
+        reuse-disabled policies, so the sweep covers all relevant memos."""
+        for oracle in self.memo.oracles_for(table_name):
+            if hasattr(oracle, "memo_invalidate"):
+                oracle.memo_invalidate(ids)
+        self._clear_pair_oracles(table_name)
+
+    def _clear_pair_oracles(self, table_name: str) -> None:
+        """Pair (join) oracles memoize by pair id ``i * len(right) + j``:
+        growing the right table reindexes every pair and updating either
+        side changes pair payloads, so ANY mutation clears the whole memo
+        of every join oracle sighted on the table."""
+        for oracle in self.memo.pair_oracles_for(table_name):
+            if hasattr(oracle, "memo_clear"):
+                oracle.memo_clear()
 
     # ---------------------------------------------------------- accounting
     def _absorb(self, delta: OracleStats) -> None:

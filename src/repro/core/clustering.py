@@ -14,6 +14,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.kernels.kmeans.ops import assign_clusters
@@ -71,6 +72,18 @@ def kmeans(key, x, k: int, max_iters: int = 50, tol: float = 1e-4):
 def kmeans_predict(x, cents):
     assign, _ = assign_clusters(x, cents)
     return assign
+
+
+def assign_to_nearest(embeddings, centroids) -> np.ndarray:
+    """Host-side incremental assignment (paper §3.1 update handling).
+
+    New or updated rows join the nearest *existing* centroid — no re-fit —
+    so a table ``append``/``update`` patches the precluster cache instead of
+    invalidating it.  Centroid drift accumulates across patches; callers
+    that care can force a fresh ``kmeans`` fit under a new seed.
+    """
+    emb = jnp.asarray(np.asarray(embeddings, dtype=np.float32))
+    return np.asarray(kmeans_predict(emb, jnp.asarray(centroids)))
 
 
 @jax.jit

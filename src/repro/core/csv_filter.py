@@ -85,6 +85,30 @@ class FilterResult:
     # tuples the driver was asked to decide: the full table, or the live
     # subset when a plan cascade masks out already-rejected tuples
     n_input: int = -1
+    # tuples decided by replaying a session-memoized earlier run (zero
+    # oracle cost); > 0 only on the repro.api reuse path
+    n_replayed: int = 0
+
+
+def replay_result(mask: np.ndarray, n_input: int, n_replayed: int,
+                  rerun: Optional[FilterResult] = None,
+                  total_time_s: float = 0.0) -> FilterResult:
+    """FilterResult for a (possibly partial) memo replay.
+
+    ``mask`` is the merged full-length decision mask; ``rerun`` is the
+    driver result for the dirty subset that had to be re-voted (None when
+    the whole live set replayed).  Replayed tuples cost zero oracle calls,
+    so every count not covered by ``rerun`` is zero.
+    """
+    if rerun is None:
+        return FilterResult(
+            mask=mask, n_llm_calls=0, input_tokens=0, output_tokens=0,
+            n_voted=0, n_fallback=0, recluster_rounds=0,
+            recluster_time_s=0.0, total_time_s=total_time_s, cluster_log=[],
+            xi_used=0.0, n_input=int(n_input), n_replayed=int(n_replayed))
+    return dataclasses.replace(
+        rerun, mask=mask, n_input=int(n_input), n_replayed=int(n_replayed),
+        total_time_s=total_time_s or rerun.total_time_s)
 
 
 # ---------------------------------------------------------------- round plan

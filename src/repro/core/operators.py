@@ -20,9 +20,13 @@ from repro.core.csv_filter import CSVConfig
 _FILTER_METHODS = ("csv", "csv-sim", "reference", "lotus", "bargain")
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(f"{old} is deprecated; use {new} (see docs/api.md)",
-                  DeprecationWarning, stacklevel=3)
+def _deprecation_msg(old: str, new: str) -> str:
+    """Shims warn with ``stacklevel=2`` at their own top line so the warning
+    is attributed to the *caller* of the public method.  (The previous
+    helper-issued warning hardcoded the helper's stack depth — correct only
+    for one exact nesting, and silently wrong the moment the shim body moved
+    the call; tests/test_api.py now asserts the reported location.)"""
+    return f"{old} is deprecated; use {new} (see docs/api.md)"
 
 
 class SemanticTable:
@@ -36,10 +40,14 @@ class SemanticTable:
         self._embeddings = (np.asarray(embeddings, np.float32)
                             if embeddings is not None else None)
         self._embedder = embedder
-        # legacy per-instance clustering cache keyed by (n_clusters, seed);
-        # the session layer keys its cache by (table id, n_clusters, seed)
-        # and delegates computation here, so both stay coherent
-        self._assign_cache: dict[tuple[int, int], np.ndarray] = {}
+        # legacy per-instance clustering cache keyed by (n_clusters, seed),
+        # holding (assignment, centroids): centroids stay around so table
+        # mutations can patch the assignment incrementally (nearest-centroid)
+        # instead of re-running k-means.  The session layer keys its cache by
+        # (table id, n_clusters, seed) and delegates computation here, so
+        # both stay coherent.
+        self._assign_cache: dict[tuple[int, int],
+                                 tuple[np.ndarray, np.ndarray]] = {}
         self._api_handle = None  # lazily-created repro.api handle (shims)
 
     def __len__(self):
@@ -57,15 +65,114 @@ class SemanticTable:
 
     def precluster(self, n_clusters: int, seed: int = 0) -> np.ndarray:
         """Offline phase: cluster once, reuse across predicates."""
+        return self.precluster_full(n_clusters, seed)[0]
+
+    def precluster_full(self, n_clusters: int, seed: int = 0
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """(assignment, centroids) — centroids power incremental updates."""
         key = (n_clusters, seed)
         if key not in self._assign_cache:
             import jax
             import jax.numpy as jnp
             from repro.core.clustering import kmeans
-            _, assign, _ = kmeans(jax.random.key(seed),
-                                  jnp.asarray(self.embeddings), n_clusters)
-            self._assign_cache[key] = np.asarray(assign)
+            cents, assign, _ = kmeans(jax.random.key(seed),
+                                      jnp.asarray(self.embeddings), n_clusters)
+            self._assign_cache[key] = (np.asarray(assign), np.asarray(cents))
         return self._assign_cache[key]
+
+    # --------------------------------------------------- incremental updates
+    # Plumbing for ``repro.api.TableHandle.append``/``update``: mutate the
+    # payload in place and PATCH every cached clustering (new/changed rows
+    # join the nearest existing centroid) instead of dropping it.  Returns
+    # {(n_clusters, seed): (patched assignment, touched cluster ids)} so the
+    # session layer can refresh its own cache and mark clusters dirty.
+
+    def _append_rows(self, texts: Optional[Sequence[str]],
+                     embeddings: Optional[np.ndarray]) -> dict:
+        # validate EVERYTHING before mutating: a partial append (texts
+        # extended, embeddings not) would corrupt the table invariant
+        new = (np.asarray(embeddings, np.float32)
+               if embeddings is not None else None)
+        if self.texts is not None and texts is None:
+            raise ValueError("table holds texts; append needs texts=")
+        if self.texts is None and texts is not None:
+            # mirror of _update_rows' "no texts to update": silently
+            # dropping the payloads would orphan the appended rows
+            raise ValueError("table has no texts; append embeddings only")
+        if texts is not None and new is not None and len(texts) != len(new):
+            raise ValueError(f"append got {len(texts)} texts but "
+                             f"{len(new)} embedding rows")
+        if self._embeddings is None:
+            if new is not None:
+                # silently dropping them would re-embed these rows from
+                # text later, diverging from what the caller supplied
+                raise ValueError(
+                    "table embeddings are still lazy; materialize them "
+                    "first (access .embeddings) or append texts only")
+            self.texts.extend(texts)
+            return {}  # embeddings still lazy: nothing clustered yet
+        if new is None:
+            raise ValueError("table has materialized embeddings; append "
+                             "needs embeddings (or an embedder)")
+        if new.ndim != 2 or new.shape[1] != self._embeddings.shape[1]:
+            raise ValueError(f"append embeddings have shape {new.shape}; "
+                             f"expected (*, {self._embeddings.shape[1]})")
+        if self.texts is not None:
+            self.texts.extend(texts)
+        from repro.core.clustering import assign_to_nearest
+        touched: dict = {}
+        for key, (assign, cents) in self._assign_cache.items():
+            add = assign_to_nearest(new, cents)
+            patched = np.concatenate([assign, add])
+            self._assign_cache[key] = (patched, cents)
+            touched[key] = (patched, np.unique(add))
+        self._embeddings = np.concatenate([self._embeddings, new])
+        return touched
+
+    def _update_rows(self, ids: np.ndarray, texts: Optional[Sequence[str]],
+                     embeddings: Optional[np.ndarray]) -> dict:
+        # validate EVERYTHING before mutating (same rule as _append_rows):
+        # a partial update would leave new texts against old embeddings
+        ids = np.asarray(ids, dtype=np.int64)
+        new = (np.asarray(embeddings, np.float32)
+               if embeddings is not None else None)
+        if texts is not None and self.texts is None:
+            raise ValueError("table has no texts to update")
+        if texts is not None and len(texts) != len(ids):
+            raise ValueError(f"update got {len(ids)} ids but "
+                             f"{len(texts)} texts")
+        if new is not None and len(new) != len(ids):
+            # numpy would silently broadcast/partially assign otherwise
+            raise ValueError(f"update got {len(ids)} ids but "
+                             f"{len(new)} embedding rows")
+        if new is not None and self._embeddings is None:
+            raise ValueError(
+                "table embeddings are still lazy; materialize them first "
+                "(access .embeddings) or update texts only")
+        if new is not None and (new.ndim != 2
+                                or new.shape[1] != self._embeddings.shape[1]):
+            raise ValueError(f"update embeddings have shape {new.shape}; "
+                             f"expected (*, {self._embeddings.shape[1]})")
+        if len(ids) and (ids.min() < 0 or ids.max() >= len(self)):
+            raise IndexError(f"update ids out of range for table of "
+                             f"{len(self)} rows")
+        if texts is not None:
+            for i, t in zip(ids, texts):
+                self.texts[int(i)] = t
+        if new is None:
+            return {}
+        from repro.core.clustering import assign_to_nearest
+        touched: dict = {}
+        for key, (assign, cents) in self._assign_cache.items():
+            old_clusters = np.unique(assign[ids])
+            add = assign_to_nearest(new, cents)
+            patched = assign.copy()
+            patched[ids] = add
+            self._assign_cache[key] = (patched, cents)
+            touched[key] = (patched,
+                            np.unique(np.concatenate([old_clusters, add])))
+        self._embeddings[ids] = new
+        return touched
 
     def _handle(self):
         """The session-layer handle backing the deprecation shims (one
@@ -89,17 +196,23 @@ class SemanticTable:
         overlaps oracle prefill with voting).  Baseline ``**kw`` (e.g.
         ``sample_size``) rides along unchanged.
         """
-        _deprecated("SemanticTable.sem_filter",
-                    "Session.table(...).filter(...).collect()")
+        warnings.warn(_deprecation_msg(
+            "SemanticTable.sem_filter",
+            "Session.table(...).filter(...).collect()"),
+            DeprecationWarning, stacklevel=2)
         if method not in _FILTER_METHODS:
             raise ValueError(f"unknown method {method!r}; "
                              f"expected one of {_FILTER_METHODS}")
         if method in ("lotus", "bargain") and proxy is None:
             raise ValueError(f"method {method!r} requires a proxy model")
         from repro.api import ExecutionPolicy
+        # reuse_memo/reuse_stats off: the legacy surface promises
+        # run-by-run bit-identity with the direct machinery, so the shim's
+        # private session must never replay across calls
         pol = ExecutionPolicy.from_csv_config(
             cfg or CSVConfig(), method=method,
-            reuse_clustering=reuse_clustering, baseline=dict(kw))
+            reuse_clustering=reuse_clustering, baseline=dict(kw),
+            reuse_memo=False, reuse_stats=False)
         if executor is not None:
             pol = pol.replace(executor=executor)
         if pipeline_depth is not None:
@@ -118,12 +231,15 @@ class SemanticTable:
         composed predicate expression (``repro.plan`` AST) as a cost-ordered
         short-circuit cascade.  Returns a ``PlanResult``.
         """
-        _deprecated("SemanticTable.sem_filter_expr",
-                    "Session.table(...).filter(expr).collect()")
+        warnings.warn(_deprecation_msg(
+            "SemanticTable.sem_filter_expr",
+            "Session.table(...).filter(expr).collect()"),
+            DeprecationWarning, stacklevel=2)
         from repro.api import ExecutionPolicy
         pol = ExecutionPolicy.from_csv_config(
             cfg or CSVConfig(), optimize=optimize, pilot_size=pilot_size,
-            reuse_clustering=reuse_clustering)
+            reuse_clustering=reuse_clustering,
+            reuse_memo=False, reuse_stats=False)
         return self._handle().filter(expr, policy=pol).collect().raw
 
     def sem_join(self, right: "SemanticTable", oracle, cfg=None,
@@ -133,8 +249,10 @@ class SemanticTable:
         ``i * len(right) + j`` (see ``repro.plan.join.pair_ids``).  Returns
         a ``JoinResult``.
         """
-        _deprecated("SemanticTable.sem_join",
-                    "Session.table(...).join(right, oracle).collect()")
+        warnings.warn(_deprecation_msg(
+            "SemanticTable.sem_join",
+            "Session.table(...).join(right, oracle).collect()"),
+            DeprecationWarning, stacklevel=2)
         from repro.api import ExecutionPolicy
         from repro.plan.join import JoinConfig
         pol = ExecutionPolicy.from_join_config(

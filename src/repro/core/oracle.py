@@ -126,6 +126,25 @@ class BaseOracle:
     def memo_restore(self, snap: dict):
         self._memo.update({int(k): bool(v) for k, v in snap.items()})
 
+    def memo_invalidate(self, ids) -> int:
+        """Drop per-id memo entries whose tuple *content* changed (§3.1
+        updates): a memo keyed by tuple id is only valid while the tuple's
+        payload is.  ``TableHandle.update`` calls this for every oracle the
+        session has seen touch the table.  Returns entries dropped."""
+        dropped = 0
+        for i in np.asarray(ids, dtype=np.int64):
+            if self._memo.pop(int(i), None) is not None:
+                dropped += 1
+        return dropped
+
+    def memo_clear(self) -> int:
+        """Drop the whole per-id memo.  Needed for *pair* oracles after a
+        table mutation: pair ids ``i * len(right) + j`` reindex when the
+        right table grows, so no per-id invalidation can be correct."""
+        n = len(self._memo)
+        self._memo.clear()
+        return n
+
 
 class SyntheticOracle(BaseOracle):
     def __init__(self, labels: np.ndarray, flip_prob: float = 0.0,

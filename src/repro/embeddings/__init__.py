@@ -1,1 +1,6 @@
+from repro.embeddings.cache import (CachingEmbedder, EmbeddingCache,
+                                    content_key)
 from repro.embeddings.encoder import EmbeddingModel, encode_texts
+
+__all__ = ["CachingEmbedder", "EmbeddingCache", "content_key",
+           "EmbeddingModel", "encode_texts"]

@@ -45,6 +45,14 @@ class PredStats:
     pilot_calls: int         # actual LLM calls spent (memo hits excluded)
     pilot_input_tokens: int = 0
     pilot_output_tokens: int = 0
+    # where the selectivity came from: "pilot" (fresh probe), "observed"
+    # (a previous run's actual pass rate — session memo), or "memo"
+    # (decisions fully replayable at the current table version)
+    source: str = "pilot"
+    # True when the session memo can replay this leaf's decisions without
+    # oracle calls: the optimizer then costs the leaf at zero, which orders
+    # it first (free live-set shrinkage for everything downstream)
+    replayable: bool = False
 
 
 def pilot_predicates(leaves: Sequence[Pred], live_ids: np.ndarray,

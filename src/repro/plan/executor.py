@@ -26,7 +26,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.csv_filter import CSVConfig, FilterResult, semantic_filter
+from repro.core.csv_filter import (CSVConfig, FilterResult, replay_result,
+                                   semantic_filter)
 from repro.plan.cost import PredStats, pilot_predicates
 from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
 from repro.plan.optimizer import PlanEstimate, optimize
@@ -61,6 +62,9 @@ class NodeRecord:
     input_tokens: int
     output_tokens: int
     result: Optional[FilterResult]
+    # live tuples decided by replaying session-memoized decisions (zero
+    # oracle cost); n_in - n_replayed tuples went through the CSV driver
+    n_replayed: int = 0
 
 
 @dataclasses.dataclass
@@ -105,21 +109,30 @@ class PlanExecutor:
 
     def __init__(self, table, cfg: Optional[CSVConfig] = None,
                  optimize: bool = True, pilot_size: int = 32,
-                 reuse_clustering: bool = True):
+                 reuse_clustering: bool = True, memo=None):
         self.table = table
         self.cfg = cfg or CSVConfig()
         self.optimize = optimize
         self.pilot_size = int(pilot_size)
         self.reuse_clustering = reuse_clustering
+        # optional cross-query reuse hook (duck-typed; repro.api.memo binds
+        # the session memo here): ``lookup(leaf, cfg) -> ReplayHit | None``
+        # serves memoized decisions, ``record(leaf, cfg, fr, live)`` observes
+        # executed leaves.  None keeps the executor fully standalone.
+        self.memo = memo
         self.n = len(table)
 
-    def pilot(self, expr: Expr) -> Dict[str, PredStats]:
+    def pilot(self, expr: Expr, skip=()) -> Dict[str, PredStats]:
         """Probe every unique leaf on the seed-derived pilot sample.  The
         draw depends only on (cfg.seed, pilot_size, n) — callers may cache
         the result under that key and re-plan with different cost-model
-        knobs without touching the oracle again."""
+        knobs without touching the oracle again.  ``skip`` names leaves
+        whose statistics the caller already has (session memo): the id draw
+        is unchanged (probes are independent per leaf), so skipping keeps
+        the probed leaves bit-identical to a full pilot."""
         rng = np.random.default_rng([self.cfg.seed, _PILOT_STREAM])
-        return pilot_predicates(expr.leaves(), np.arange(self.n), rng,
+        leaves = [lf for lf in expr.leaves() if lf.name not in set(skip)]
+        return pilot_predicates(leaves, np.arange(self.n), rng,
                                 self.pilot_size)
 
     def prepare(self, expr: Expr,
@@ -223,16 +236,50 @@ class PlanExecutor:
         if len(live) == 0:
             return np.zeros(self.n, dtype=bool)
         cfg = leaf.cfg if leaf.cfg is not None else self.cfg
+        hit = self.memo.lookup(leaf, cfg) if self.memo is not None else None
+        if hit is not None:
+            return self._replay_pred(leaf, cfg, live, hit)
         assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
                   if self.reuse_clustering else None)
         subset = None if len(live) == self.n else live
         fr = semantic_filter(self.table.embeddings, leaf.oracle, cfg,
                              precomputed_assign=assign, subset_ids=subset)
+        if self.memo is not None:
+            self.memo.record(leaf, cfg, fr, live)
+        self._log_node(leaf, live, fr)
+        return fr.mask
+
+    def _replay_pred(self, leaf: Pred, cfg: CSVConfig, live: np.ndarray,
+                     hit) -> np.ndarray:
+        """Serve a leaf from session-memoized decisions: clean-cluster rows
+        replay the stored mask at zero oracle cost; rows of clusters dirtied
+        by ``append``/``update`` since the memo's table version are re-voted
+        through the normal driver, restricted to that dirty subset."""
+        t0 = time.time()
+        out = np.zeros(self.n, dtype=bool)
+        replay = live[np.isin(live, hit.replay_rows)]
+        out[replay] = hit.mask[replay]
+        sub = None
+        rerun = live[np.isin(live, hit.rerun_rows)]
+        if len(rerun):
+            assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
+                      if self.reuse_clustering else None)
+            sub = semantic_filter(self.table.embeddings, leaf.oracle, cfg,
+                                  precomputed_assign=assign, subset_ids=rerun)
+            out[rerun] = sub.mask[rerun]
+        fr = replay_result(out, n_input=len(live), n_replayed=len(replay),
+                           rerun=sub, total_time_s=time.time() - t0)
+        if self.memo is not None:
+            self.memo.record(leaf, cfg, fr, live)
+        self._log_node(leaf, live, fr)
+        return out
+
+    def _log_node(self, leaf: Pred, live: np.ndarray,
+                  fr: FilterResult) -> None:
         self._order.append(leaf.name)
         self._results[leaf.name] = fr
         self._node_log.append(NodeRecord(
             name=leaf.name, n_in=int(len(live)),
             n_out=int(fr.mask.sum()), n_llm_calls=fr.n_llm_calls,
             input_tokens=fr.input_tokens, output_tokens=fr.output_tokens,
-            result=fr))
-        return fr.mask
+            result=fr, n_replayed=int(fr.n_replayed)))

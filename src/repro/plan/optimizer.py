@@ -65,8 +65,11 @@ def expected_cost(expr: Expr, n: float, stats: Dict[str, PredStats],
     """(expected tokens, expected calls) of evaluating ``expr`` on ``n`` live
     tuples with its children in their CURRENT order (short-circuit cascade)."""
     if isinstance(expr, Pred):
+        st = stats[expr.name]
+        if st.replayable:
+            return 0.0, 0.0  # session memo replays decisions for free
         calls = est_oracle_calls(n, _leaf_cfg(expr, default_cfg))
-        return calls * stats[expr.name].tokens_per_call, calls
+        return calls * st.tokens_per_call, calls
     if isinstance(expr, Not):
         return expected_cost(expr.child, n, stats, default_cfg)
     conj = isinstance(expr, And)
@@ -162,9 +165,10 @@ def node_estimates(expr: Expr, n: float, stats: Dict[str, PredStats],
     def walk(node: Expr, live: float) -> None:
         if isinstance(node, Pred):
             st = stats.get(node.name)
+            est = (0.0 if st is not None and st.replayable
+                   else est_oracle_calls(live, _leaf_cfg(node, default_cfg)))
             out.append(NodeEstimate(
-                name=node.name, est_live_in=float(live),
-                est_calls=est_oracle_calls(live, _leaf_cfg(node, default_cfg)),
+                name=node.name, est_live_in=float(live), est_calls=est,
                 selectivity=st.selectivity if st is not None else None))
             return
         if isinstance(node, Not):

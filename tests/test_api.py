@@ -16,6 +16,9 @@ Bit-identity here is asserted against the *direct* machinery
 — not against the deprecated shims, which themselves route through the new
 layer.
 """
+import inspect
+import warnings
+
 import numpy as np
 import pytest
 
@@ -418,6 +421,28 @@ def test_legacy_sem_filter_expr_warns(ds):
     with pytest.warns(DeprecationWarning, match="sem_filter_expr"):
         r = table.sem_filter_expr(Pred("q1", _oracle(ds)), cfg=CFG)
     assert r.pilot_calls == 0 and r.order == ["q1"]
+
+
+def test_deprecation_warnings_point_at_caller(ds):
+    """The shims must attribute their DeprecationWarning to the CALLER's
+    file/line (stacklevel), not to the shim body — otherwise every
+    deprecation report points at operators.py and is useless for
+    migration."""
+    table = SemanticTable(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        lineno = inspect.currentframe().f_lineno + 1
+        table.sem_filter(o, method="csv", cfg=CFG)
+        table.sem_filter_expr(Pred("q1", _oracle(ds)), cfg=CFG)
+        tiny = SemanticTable(embeddings=ds.embeddings[:60])
+        tiny.sem_join(SemanticTable(embeddings=ds.embeddings[:60]),
+                      SyntheticOracle(np.zeros(60 * 60, dtype=bool)))
+    dep = [w for w in rec if w.category is DeprecationWarning]
+    assert len(dep) == 3
+    assert all(w.filename == __file__ for w in dep), \
+        [w.filename for w in dep]  # caller, not the shim module
+    assert dep[0].lineno == lineno
 
 
 def test_legacy_sem_join_warns(ds):

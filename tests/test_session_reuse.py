@@ -1,0 +1,497 @@
+"""Session-level multi-query optimization (ISSUE 4 acceptance criteria).
+
+Hard contracts:
+1. warm replay — re-running the same ``.filter().collect()`` (same oracle
+   object, same semantic config) on an unchanged table spends ZERO oracle
+   calls and returns a bit-identical mask;
+2. with an EMPTY memo the reuse path is bit-identical to a cold session
+   (reuse never changes behavior until there is something to reuse);
+3. a later query over a table the session has already filtered spends
+   zero re-embedding and strictly fewer total oracle calls than a cold
+   session (memoized decisions replay; memoized pilot/observed
+   selectivities replace fresh probes);
+4. ``append()``/``update()`` invalidate exactly the touched clusters: the
+   next collect re-votes only those, replaying every clean-cluster row;
+5. two Sessions never share embedding-cache state unless explicitly wired
+   (``Session(embedding_cache=shared)``).
+"""
+import numpy as np
+import pytest
+
+from repro.api import EmbeddingCache, ExecutionPolicy, OracleBudgetError, Session
+from repro.core import SyntheticOracle
+
+N = 1200
+COLD = ExecutionPolicy(n_clusters=4, reuse_memo=False, reuse_stats=False)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _oracle(ds, q="RV-Q1", flip=0.02):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=7,
+                           token_lens=ds.token_lens)
+
+
+# ---------------------------------------------------------------- blobs
+def _blobs(n_per=300, k=4, seed=0):
+    """k well-separated clusters -> k-means recovers them exactly, so the
+    dirty-cluster arithmetic below is deterministic."""
+    rng = np.random.default_rng(seed)
+    centers = np.eye(k, 3 if k <= 3 else k, dtype=np.float32) * 10.0
+    emb = np.concatenate([
+        centers[i] + rng.normal(0, 0.5, (n_per, centers.shape[1]))
+        .astype(np.float32) for i in range(k)])
+    labels = np.concatenate([np.full(n_per, bool(i % 2 == 0))
+                             for i in range(k)])
+    return centers, emb, labels
+
+
+# ------------------------------------------------------------ warm replay
+def test_warm_replay_zero_calls_bit_identical(ds):
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    o = _oracle(ds)
+    r1 = t.filter(o, name="A").collect()
+    assert r1.n_llm_calls > 0 and r1.n_replayed == 0
+    calls_after_cold = o.stats.n_calls
+    # a NEW query object, even anonymously named: same oracle => replay
+    r2 = t.filter(o).collect()
+    assert r2.n_llm_calls == 0 and r2.pilot_calls == 0
+    assert r2.n_replayed == N
+    assert (r2.mask == r1.mask).all()
+    assert o.stats.n_calls == calls_after_cold  # oracle untouched
+    assert sess.stats.n_calls == r1.n_llm_calls
+
+
+def test_empty_memo_bit_identical_to_cold(ds):
+    """Criterion: bit-identity to a cold run whenever the memo is empty."""
+    warm_sess = Session()
+    rw = warm_sess.table(embeddings=ds.embeddings).filter(
+        _oracle(ds), name="A").collect()
+    cold_sess = Session()
+    rc = cold_sess.table(embeddings=ds.embeddings).filter(
+        _oracle(ds), name="A").collect(COLD)
+    assert (rw.mask == rc.mask).all()
+    assert rw.n_llm_calls == rc.n_llm_calls
+    assert rw.n_replayed == rc.n_replayed == 0
+
+
+def test_replay_requires_matching_semantics(ds):
+    """A different xi (or vote) is a different sampling process: decisions
+    must NOT replay across it."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    t.filter(o, name="A").collect(ExecutionPolicy(xi=0.005))
+    r = t.filter(o, name="A").collect(ExecutionPolicy(xi=0.02))
+    assert r.n_replayed == 0
+    # ...but the bit-identical executor variants DO replay across each other
+    r2 = t.filter(o, name="A").collect(
+        ExecutionPolicy(xi=0.005, executor="sequential"))
+    assert r2.n_replayed == N and r2.n_llm_calls == 0
+
+
+def test_two_sessions_do_not_share_memo(ds):
+    o = _oracle(ds)
+    s1 = Session()
+    r1 = s1.table(embeddings=ds.embeddings).filter(o).collect()
+    s2 = Session()
+    r2 = s2.table(embeddings=ds.embeddings).filter(o).collect()
+    assert r1.n_replayed == 0 and r2.n_replayed == 0
+
+
+# ----------------------------------------- cross-query planning reuse
+def test_second_query_fewer_calls_than_cold_session(ds):
+    """Criterion: after filtering A, a composed (A & B) query with a new
+    predicate B replays A's decisions and skips A's pilot — strictly fewer
+    total calls than a cold session, same mask.
+
+    flip=0 keeps the oracle deterministic: the cold control consumes its
+    flip stream in a different order (pilot before cascade), so with a
+    stochastic oracle the masks would agree only in expectation (see
+    docs/caching.md)."""
+    def oracles():
+        return (_oracle(ds, "RV-Q3", flip=0.0),
+                _oracle(ds, "RV-Q1", flip=0.0))
+
+    # warm: A alone first, then A & B in the same session
+    oA, oB = oracles()
+    warm = Session()
+    t = warm.table(embeddings=ds.embeddings)
+    rA = t.filter(oA, name="A").collect()
+    rw = (t.filter(oA, name="A") & t.filter(oB, name="B")).collect()
+    # cold control: the same composed query in a fresh session
+    cA, cB = oracles()
+    cold = Session()
+    tc = cold.table(embeddings=ds.embeddings)
+    rc = (tc.filter(cA, name="A") & tc.filter(cB, name="B")).collect(COLD)
+
+    assert rw.n_replayed == N                  # A replayed in full
+    assert rw.pilot_calls < rc.pilot_calls     # A's probe skipped
+    assert rw.n_llm_calls < rc.n_llm_calls     # strictly fewer total calls
+    # RV-Q3 is the more selective conjunct, so the cold optimizer also runs
+    # A first: both cascades evaluate B on the same survivors => bit-equal
+    assert rc.order == ["A", "B"] and rw.order == ["A", "B"]
+    assert (rw.mask == rc.mask).all()
+    assert rA.n_llm_calls > 0
+
+
+def test_pilot_memo_reused_across_queries(ds):
+    """A leaf piloted by one query is not re-probed by the next (same table
+    version, seed, pilot_size) — the second query reports only the fresh
+    leaves' pilot calls."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    oA, oB, oC = (_oracle(ds, "RV-Q1"), _oracle(ds, "RV-Q2"),
+                  _oracle(ds, "RV-Q3"))
+    r1 = (t.filter(oA, name="A") & t.filter(oB, name="B")).collect()
+    assert r1.pilot_calls > 0
+    r2 = (t.filter(oA, name="A") & t.filter(oC, name="C")).collect()
+    # A is replayable + piloted; only C pays a probe
+    assert 0 < r2.pilot_calls <= r1.pilot_calls // 2
+
+
+def test_reuse_knobs_disable_reuse(ds):
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    r1 = t.filter(o, name="A").collect()
+    r2 = t.filter(o, name="A").collect(COLD)
+    assert r2.n_replayed == 0
+    # same oracle object: the ORACLE memo still dedups ids, so the re-run
+    # spends no new calls — but it goes through the full driver
+    assert (r2.mask == r1.mask).all()
+
+
+def test_reuse_off_collect_not_polluted_by_warm_explain(ds):
+    """Review regression: explain() under a reuse-enabled policy caches
+    pilot stats with memo-derived (replayable, cost-0) leaves; a later
+    reuse-DISABLED collect of the same query object must not plan with
+    them — it must order and spend exactly like a cold session."""
+    oA, oB = _oracle(ds, "RV-Q3", flip=0.0), _oracle(ds, "RV-Q1", flip=0.0)
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    t.filter(oA, name="A").collect()         # warm the memo for A
+    q = t.filter(oA, name="A") & t.filter(oB, name="B")
+    q.explain()                              # reuse-enabled planning
+    warm_key = [k for k in q._pilot_cache if k[2] or k[3]]
+    assert warm_key and q._pilot_cache[warm_key[0]]["A"].replayable
+    r = q.collect(COLD)
+    # the cold collect planned from its OWN cache entry, with no
+    # memo-derived (replayable / observed) statistics
+    cold_stats = q._pilot_cache[
+        (COLD.seed, COLD.pilot_size, False, False, 0)]
+    assert not any(ps.replayable for ps in cold_stats.values())
+    assert all(ps.source == "pilot" for ps in cold_stats.values())
+    assert r.n_replayed == 0
+    # note: oracle-level memoization (a separate, always-on layer) still
+    # dedups ids for the warm oracle, so call COUNTS legitimately differ
+    # from a fresh session; the plan and the mask must not
+    cold = Session()
+    tc = cold.table(embeddings=ds.embeddings)
+    rc = (tc.filter(_oracle(ds, "RV-Q3", flip=0.0), name="A")
+          & tc.filter(_oracle(ds, "RV-Q1", flip=0.0), name="B")).collect(COLD)
+    assert r.order == rc.order
+    assert (r.mask == rc.mask).all()
+
+
+def test_budget_accepts_warm_replay(ds):
+    """Memo accounting in max_oracle_calls: a budget a cold run would blow
+    passes once the decisions are memoized."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    tight = ExecutionPolicy(max_oracle_calls=5)
+    with pytest.raises(OracleBudgetError):
+        t.filter(o, name="A").collect(tight)
+    assert o.stats.n_calls == 0     # the guard is closed-form
+    r1 = t.filter(o, name="A").collect()
+    r2 = t.filter(o, name="A").collect(tight)
+    assert r2.n_llm_calls == 0 and (r2.mask == r1.mask).all()
+
+
+# ------------------------------------------------- incremental mutation
+def test_append_revotes_only_touched_clusters():
+    centers, emb, labels = _blobs()
+    rng = np.random.default_rng(99)
+    new = centers[0] + rng.normal(0, 0.5, (50, centers.shape[1])).astype(
+        np.float32)
+    oracle = SyntheticOracle(np.concatenate([labels, np.ones(50, bool)]))
+    sess = Session()
+    t = sess.table(embeddings=emb, name="blobs")
+    pol = ExecutionPolicy(n_clusters=4)
+    r1 = t.filter(oracle, name="p").collect(pol)
+    assert t.version == 0
+
+    t.append(embeddings=new)
+    assert t.version == 1 and len(t) == len(emb) + 50
+
+    assign = sess._assign_cache[("blobs", 4, 0)]
+    assert len(assign) == len(t)            # patched, not invalidated
+    dirty_clusters = np.unique(assign[len(emb):])
+    clean_rows = ~np.isin(assign, dirty_clusters)
+    assert 0 < dirty_clusters.size < 4      # blobs well separated
+
+    r2 = t.filter(oracle, name="p").collect(pol)
+    # exactly the clean-cluster rows replay; only dirty clusters re-vote
+    assert r2.n_replayed == int(clean_rows.sum())
+    assert 0 < r2.n_llm_calls < r1.n_llm_calls
+    old_clean = clean_rows[:len(emb)]
+    assert (r2.mask[:len(emb)][old_clean] == r1.mask[old_clean]).all()
+    assert r2.mask[len(emb):].all()         # appended rows decided (True)
+    # memo upgraded: a third collect is a full zero-cost replay again
+    r3 = t.filter(oracle).collect(pol)
+    assert r3.n_llm_calls == 0 and r3.n_replayed == len(t)
+    assert (r3.mask == r2.mask).all()
+
+
+def test_update_invalidates_touched_clusters_and_oracle_memo():
+    centers, emb, labels = _blobs()
+    oracle = SyntheticOracle(labels.copy())
+    sess = Session()
+    t = sess.table(embeddings=emb, name="blobs")
+    pol = ExecutionPolicy(n_clusters=4)
+    r1 = t.filter(oracle, name="p").collect(pol)
+
+    # move 10 rows of blob 1 (label False) into blob 2 (label True): both
+    # their content and their truth change
+    rng = np.random.default_rng(3)
+    upd = np.arange(300, 310)
+    oracle.labels[upd] = True
+    moved = centers[2] + rng.normal(0, 0.5, (10, centers.shape[1])).astype(
+        np.float32)
+    t.update(upd, embeddings=moved)
+    assert t.version == 1
+    assert not any(int(i) in oracle._memo for i in upd)  # stale ids dropped
+
+    # clean set per the handle's dirty bookkeeping: exactly the clusters
+    # untouched by the update (the moved rows' old cluster + new cluster
+    # are dirty at version 1)
+    assign = sess._assign_cache[("blobs", 4, 0)]
+    clean_rows = (t._dirty[(4, 0)] <= 0)[assign]
+    assert 0 < clean_rows.sum() < len(t)
+
+    r2 = t.filter(oracle, name="p").collect(pol)
+    assert r2.n_replayed == int(clean_rows.sum()) < len(t)
+    assert (r2.mask[clean_rows] == r1.mask[clean_rows]).all()
+    assert r2.mask[upd].all()               # updated rows re-decided True
+    assert 0 < r2.n_llm_calls < r1.n_llm_calls
+
+
+def test_update_invalidates_oracle_memo_even_without_reuse():
+    """Review regression: an oracle only ever used under a reuse-disabled
+    policy must still get its stale per-id memo entries dropped by
+    update() — otherwise a later collect silently serves pre-update
+    decisions for changed rows."""
+    centers, emb, labels = _blobs()
+    oracle = SyntheticOracle(labels.copy())
+    sess = Session()
+    t = sess.table(embeddings=emb, name="blobs")
+    pol = COLD
+    r1 = t.filter(oracle, name="p").collect(pol)
+    upd = np.arange(0, 5)          # blob 0, label True -> flip to False
+    oracle.labels[upd] = False
+    t.update(upd, embeddings=np.tile(centers[1], (len(upd), 1)) + 0.1)
+    assert not any(int(i) in oracle._memo for i in upd)
+    r2 = t.filter(oracle, name="p").collect(pol)
+    assert not r2.mask[upd].any()  # re-decided from the NEW labels
+    assert r1.mask[upd].all()
+
+
+def test_mutation_argument_validation():
+    _, emb, labels = _blobs(n_per=50)
+    sess = Session()
+    t = sess.table(embeddings=emb, name="b")
+    with pytest.raises(ValueError, match="ids but"):
+        t.update([1, 2, 3], embeddings=emb[:1])
+    with pytest.raises(TypeError, match="append needs"):
+        t.append()
+    lazy = Session(embedder=lambda ts: np.zeros((len(ts), 4), np.float32))
+    lt = lazy.table(texts=["a", "b"])
+    with pytest.raises(ValueError, match="still lazy"):
+        lt.append(texts=["c"], embeddings=np.zeros((1, 4), np.float32))
+    # a failed append must not leave the table partially mutated
+    assert len(lt) == 2 and lt.version == 0
+    tx = Session(embedder=lambda ts: np.zeros((len(ts), 4), np.float32))
+    th = tx.table(texts=["a", "b"])
+    _ = th.embeddings  # materialize
+    with pytest.raises(ValueError, match="texts but"):
+        th.append(texts=["c", "d"], embeddings=np.zeros((1, 4), np.float32))
+    assert len(th) == 2 and len(th.embeddings) == 2
+
+
+def test_update_validation_leaves_table_unmutated():
+    """Review regression: a failed update must not leave new texts against
+    old embeddings, and updating embeddings on a still-lazy table must
+    raise instead of silently no-oping (while paying invalidation)."""
+    sess = Session(embedder=lambda ts: np.zeros((len(ts), 4), np.float32))
+    t = sess.table(texts=["a", "b", "c"])
+    _ = t.embeddings
+    with pytest.raises(ValueError, match="ids but"):
+        t.update([0, 1], texts=["x", "y"],
+                 embeddings=np.zeros((3, 4), np.float32))
+    assert t._table.texts == ["a", "b", "c"] and t.version == 0
+    lazy = Session().table(texts=["a", "b"],
+                           embedder=lambda ts: np.zeros((len(ts), 4),
+                                                        np.float32))
+    with pytest.raises(ValueError, match="still lazy"):
+        lazy.update([0], embeddings=np.zeros((1, 4), np.float32))
+    assert lazy.version == 0
+
+
+def test_mutation_invalidates_stale_pilot_cache(ds):
+    """Review regression: a query object planned before append() must not
+    reuse its pre-mutation pilot statistics afterwards."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings, name="r")
+    oA, oB = _oracle(ds, "RV-Q3"), _oracle(ds, "RV-Q1")
+    q = t.filter(oA, name="A") & t.filter(oB, name="B")
+    q.explain()
+    n_keys = len(q._pilot_cache)
+    t.append(embeddings=ds.embeddings[:3])
+    q.explain()
+    assert len(q._pilot_cache) == n_keys + 1  # fresh entry, new version
+
+
+def test_update_does_not_invalidate_other_tables_oracles():
+    """Review regression: tuple ids are plain ints — updating table A must
+    not drop a B-only oracle's memo entries for the same numeric ids."""
+    _, emb, labels = _blobs(n_per=50)
+    sess = Session()
+    a = sess.table(embeddings=emb, name="a")
+    b = sess.table(embeddings=emb.copy(), name="b")
+    ob = SyntheticOracle(labels.copy())
+    b.filter(ob, name="pb").collect(ExecutionPolicy(n_clusters=4))
+    memo_before = len(ob._memo)
+    assert memo_before > 0
+    a.update([0, 1], embeddings=emb[10:12] + 0.1)
+    assert len(ob._memo) == memo_before  # untouched: ob never ran on "a"
+
+
+def test_append_routes_through_session_cache_for_wrapped_tables():
+    """Review regression: a pre-built SemanticTable wrapped via table=
+    carries a RAW embedder (Session.table only wraps embedders it
+    constructs with) — the mutation path must still route embedding
+    through the session's cache."""
+    from repro.core import SemanticTable
+    counter = {"rows": 0}
+    st = SemanticTable(texts=[f"r{i}" for i in range(5)],
+                       embedder=_counting_embedder(counter))
+    sess = Session()
+    t = sess.table(table=st)
+    _ = t.embeddings                 # materialize through the raw embedder
+    assert counter["rows"] == 5
+    t.append(texts=["dup", "dup"])
+    assert counter["rows"] == 6      # duplicate content embedded once
+    assert sess.embedding_cache.encoded_rows == 1
+    assert len(t) == 7
+
+
+def test_append_rejects_texts_on_embeddings_only_table():
+    """Appending texts to a table that can't store them must raise, not
+    silently orphan the payloads."""
+    sess = Session(embedder=lambda ts: np.zeros((len(ts), 4), np.float32))
+    t = sess.table(embeddings=np.zeros((5, 4), np.float32))
+    with pytest.raises(ValueError, match="no texts"):
+        t.append(texts=["a"])
+    assert len(t) == 5 and t.version == 0
+
+
+def test_cascade_runs_do_not_record_marginal_selectivity(ds):
+    """Review regression: B's pass rate measured on A's survivors is
+    conditional — it must not be stored as B's observed (marginal)
+    selectivity for later orderings."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    oA, oB = _oracle(ds, "RV-Q3"), _oracle(ds, "RV-Q1")
+    (t.filter(oA, name="A") & t.filter(oB, name="B")).collect()
+    sels = sess.memo._selectivity
+    assert (t.name, id(oA)) in sels          # A ran on the full table
+    assert (t.name, id(oB)) not in sels      # B ran on a subset only
+
+
+def test_mutation_clears_join_pair_oracle_memo():
+    """Review regression: pair oracles memoize by pair id
+    ``i * len(right) + j`` — mutating either side must clear their memo
+    (per-id invalidation cannot be mapped across the reindexing)."""
+    _, emb, labels = _blobs(n_per=40)
+    sess = Session()
+    a = sess.table(embeddings=emb[:60], name="a")
+    b = sess.table(embeddings=emb[:50], name="b")
+    pair_truth = np.outer(labels[:60], labels[:50]).ravel()
+    jo = SyntheticOracle(pair_truth)
+    a.join(b, jo).collect()
+    assert len(jo._memo) > 0
+    a.update([0], embeddings=emb[100:101])
+    assert len(jo._memo) == 0  # cleared outright, not per-id
+    # growing the RIGHT side reindexes every pair id: also cleared
+    jo2 = SyntheticOracle(pair_truth)
+    a.join(b, jo2).collect()
+    assert len(jo2._memo) > 0
+    b.append(embeddings=emb[120:121])
+    assert len(jo2._memo) == 0
+
+
+def test_append_rejects_wrong_dimension_before_mutating():
+    _, emb, labels = _blobs(n_per=40)
+    sess = Session()
+    t = sess.table(embeddings=emb, name="t")
+    with pytest.raises(ValueError, match="shape"):
+        t.append(embeddings=np.zeros((2, emb.shape[1] + 3), np.float32))
+    assert len(t) == len(emb) and t.version == 0
+    t.append(embeddings=np.zeros((0, emb.shape[1]), np.float32))
+    assert t.version == 0  # empty append is a no-op, not an invalidation
+
+
+# ------------------------------------------------------ embedding cache
+def _counting_embedder(counter):
+    def embed(texts):
+        counter["rows"] += len(texts)
+        rng = np.random.default_rng(0)
+        out = np.stack([
+            rng.normal(size=8).astype(np.float32) * 0 +
+            np.frombuffer(t.encode("utf-8").ljust(8)[:8], np.uint8)
+            .astype(np.float32) for t in texts])
+        return out
+    return embed
+
+
+def test_embedding_cache_embeds_only_new_rows():
+    counter = {"rows": 0}
+    texts = [f"tuple number {i}" for i in range(60)]
+    sess = Session(embedder=_counting_embedder(counter))
+    t1 = sess.table(texts=texts)
+    _ = t1.embeddings
+    assert counter["rows"] == 60
+    # overlapping table: only the 20 new rows hit the embedder
+    t2 = sess.table(texts=texts[:40] + [f"fresh {i}" for i in range(20)])
+    _ = t2.embeddings
+    assert counter["rows"] == 80
+    # append through the handle embeds only the appended rows
+    t1.append(texts=[f"appended {i}" for i in range(5)])
+    assert counter["rows"] == 85 and len(t1) == 65
+    assert sess.embedding_cache.hits >= 40
+
+
+def test_embedding_cache_not_shared_across_sessions_unless_wired():
+    counter = {"rows": 0}
+    texts = [f"tuple number {i}" for i in range(30)]
+    s1 = Session(embedder=_counting_embedder(counter))
+    _ = s1.table(texts=texts).embeddings
+    s2 = Session(embedder=_counting_embedder(counter))
+    _ = s2.table(texts=texts).embeddings
+    assert counter["rows"] == 60            # isolated by default
+
+    shared = EmbeddingCache()
+    s3 = Session(embedder=_counting_embedder(counter),
+                 embedding_cache=shared)
+    _ = s3.table(texts=texts).embeddings
+    s4 = Session(embedder=_counting_embedder(counter),
+                 embedding_cache=shared)
+    _ = s4.table(texts=texts).embeddings
+    assert counter["rows"] == 90            # explicit wiring shares
+    assert shared.hits == 30
