@@ -1,0 +1,108 @@
+"""Service throughput: cross-query oracle batching vs serial collects.
+
+Workload: 5 concurrent queries over one shared table (the Fig. 4 imdb
+case) — four distinct single-predicate filters plus a two-leaf cascade —
+submitted through ``Session.submit`` under ``scheduler.holding()`` so the
+whole burst merges from its first round.  The serial control collects the
+same queries one at a time in a fresh session with identical oracles.
+
+Asserted (the ISSUE-5 acceptance criteria):
+- per-query masks and oracle call counts identical to serial;
+- mean oracle batch size per merged invocation >= 1.5x the serial
+  per-invocation mean.
+
+Emitted: per-query call counts (the CI perf gate compares these against
+benchmarks/baseline.json), total calls, and the batching ratio.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.data import make_dataset
+
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+
+# (label, labels-key, oracle flip seed): distinct oracle objects per query
+# so all five run fully overlapped (shared oracles would conflict-serialize)
+PREDICATES = [("q0_pos", "RV-Q1", 7), ("q1_act", "RV-Q3", 8),
+              ("q2_plot", "RV-Q2", 9), ("q3_pos2", "RV-Q1", 11)]
+CASCADE = [("q4a_plot2", "RV-Q2", 12), ("q4b_act2", "RV-Q3", 13)]
+
+
+def _queries(ds, handle):
+    def oracle(key, seed):
+        return SyntheticOracle(ds.labels[key], flip_prob=0.02, seed=seed,
+                               token_lens=ds.token_lens)
+    oracles = [oracle(k, s) for _, k, s in PREDICATES + CASCADE]
+    qs = [handle.filter(o, name=label)
+          for (label, _, _), o in zip(PREDICATES, oracles[:4])]
+    qs.append(handle.filter(oracles[4], name=CASCADE[0][0])
+              & handle.filter(oracles[5], name=CASCADE[1][0]))
+    return qs, oracles
+
+
+def main(small: bool = False):
+    n = 4000 if small else 20000
+    ds = make_dataset("imdb_review", n=n, seed=0)
+    labels = [label for label, _, _ in PREDICATES] + ["q4_cascade"]
+
+    # ---- serial control ------------------------------------------------
+    s_serial = Session(policy=POL)
+    qs, oracles = _queries(ds, s_serial.table(embeddings=ds.embeddings,
+                                              name="reviews"))
+    t0 = time.time()
+    serial = [q.collect() for q in qs]
+    serial_wall = time.time() - t0
+    serial_batches = [b for o in oracles for b in o.stats.batch_sizes]
+
+    # ---- concurrent service -------------------------------------------
+    s_conc = Session(policy=POL)
+    qc, _ = _queries(ds, s_conc.table(embeddings=ds.embeddings,
+                                      name="reviews"))
+    t0 = time.time()
+    with s_conc.scheduler.holding():
+        tickets = [s_conc.submit(q) for q in qc]
+    conc = s_conc.gather(*tickets)
+    conc_wall = time.time() - t0
+
+    for label, rs, rc in zip(labels, serial, conc):
+        assert (rc.mask == rs.mask).all(), f"{label}: masks diverged"
+        assert rc.n_llm_calls == rs.n_llm_calls, f"{label}: call counts"
+    merge = s_conc.scheduler.stats.merge
+    serial_mean = float(np.mean(serial_batches))
+    ratio = merge.mean_batch_size / serial_mean
+    assert ratio >= 1.5, f"batching ratio {ratio:.2f} below the 1.5x floor"
+    total = sum(r.n_llm_calls for r in serial)
+    assert total == sum(r.n_llm_calls for r in conc)
+    s_conc.close()
+
+    rows = []
+    for label, r in zip(labels, serial):
+        emit(f"service/imdb/{label}",
+             r.total_time_s / max(1, r.n_llm_calls) * 1e6,
+             f"oracle={r.n_llm_calls};tokens={r.input_tokens + r.output_tokens}")
+        rows.append(("imdb_review", label,
+                     {"oracle_calls": int(r.n_llm_calls),
+                      "tokens": int(r.input_tokens + r.output_tokens)}))
+    tokens_total = sum(r.input_tokens + r.output_tokens for r in serial)
+    emit("service/imdb/total", conc_wall / max(1, total) * 1e6,
+         f"oracle={total};mean_batch_serial={serial_mean:.0f};"
+         f"mean_batch_merged={merge.mean_batch_size:.0f};"
+         f"ratio={ratio:.2f}x;merge_factor={merge.merge_factor:.1f};"
+         f"invocations={merge.n_invocations};"
+         f"wall_serial={serial_wall:.2f}s;wall_service={conc_wall:.2f}s")
+    rows.append(("imdb_review", "total",
+                 {"oracle_calls": int(total), "tokens": int(tokens_total)}))
+    return rows
+
+
+if __name__ == "__main__":
+    main(small=True)

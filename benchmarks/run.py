@@ -24,31 +24,44 @@ def _fig4_cases(rows) -> dict:
     return cases
 
 
+def _service_cases(rows) -> dict:
+    """bench_service_throughput rows -> ``service/<ds>/<label>`` entries
+    (per-query + total oracle calls of the concurrent workload, asserted
+    identical to serial — so the gate covers the scheduler path too)."""
+    return {f"service/{ds_name}/{label}": {
+        "oracle_calls": int(out["oracle_calls"]),
+        "proxy_calls": 0,
+        "tokens": int(out["tokens"]),
+    } for ds_name, label, out in rows}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale dataset sizes (slow on 1 CPU core)")
     ap.add_argument("--quick", action="store_true",
-                    help="perf-smoke mode: only the Fig. 4 small cases "
-                         "(the CI perf gate; implies small sizes)")
+                    help="perf-smoke mode: only the Fig. 4 small cases and "
+                         "the service-throughput workload (the CI perf "
+                         "gate; implies small sizes)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the Fig. 4 call/token counters as JSON "
+                    help="write the Fig. 4 / service call counters as JSON "
                          "(see benchmarks/check_regression.py)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
                          "fig6,appb,kernels,roofline,plan_order,api_overhead,"
-                         "session_reuse")
+                         "session_reuse,service")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
-        only = {"fig4"} if only is None else (only & {"fig4"})
+        quick_suites = {"fig4", "service"}
+        only = quick_suites if only is None else (only & quick_suites)
         if not only:
             # an empty set is falsy and would disable filtering entirely
-            ap.error("--quick runs only the fig4 suite; the given --only "
-                     "list excludes it")
+            ap.error("--quick runs only the fig4/service suites; the given "
+                     "--only list excludes both")
 
     from benchmarks import (bench_fig2_distance, bench_fig4_efficiency,
                             bench_table2_quality, bench_table3_hyperparams,
@@ -56,7 +69,7 @@ def main() -> None:
                             bench_fig6_synthetic, bench_appb_backbones,
                             bench_kernels, bench_plan_order,
                             bench_api_overhead, bench_session_reuse,
-                            roofline_report)
+                            bench_service_throughput, roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
@@ -66,6 +79,7 @@ def main() -> None:
         ("kernels", bench_kernels), ("plan_order", bench_plan_order),
         ("api_overhead", bench_api_overhead),
         ("session_reuse", bench_session_reuse),
+        ("service", bench_service_throughput),
         ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")
@@ -79,6 +93,8 @@ def main() -> None:
             ret = mod.main(small=small)
             if name == "fig4" and ret:
                 json_cases.update(_fig4_cases(ret))
+            if name == "service" and ret:
+                json_cases.update(_service_cases(ret))
             print(f"# suite {name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness running

@@ -42,6 +42,17 @@ from repro.plan.cost import PredStats
 from repro.plan.expr import Pred
 
 
+def oracle_identity(oracle) -> Any:
+    """The object whose ``id()`` keys memo entries.
+
+    The service layer (``repro.service.scheduler``) wraps leaf oracles in
+    batching proxies; a proxy advertises the oracle it stands in for via
+    ``memo_target`` so a scheduled and a serial collection of the same
+    predicate land on ONE memo identity — decisions recorded by either
+    replay for both."""
+    return getattr(oracle, "memo_target", oracle)
+
+
 def cfg_fingerprint(cfg: CSVConfig) -> tuple:
     """Semantics-affecting CSVConfig fields (mask-identity equivalence
     class).  executor / pipeline_depth are physical knobs with a guarded
@@ -49,6 +60,14 @@ def cfg_fingerprint(cfg: CSVConfig) -> tuple:
     return (cfg.n_clusters, cfg.xi, cfg.min_sample, cfg.lb, cfg.ub,
             cfg.max_recluster, cfg.vote, cfg.epsilon, cfg.theory_l,
             cfg.sim_v, cfg.sim_bandwidth, cfg.kmeans_iters, cfg.seed)
+
+
+def join_fingerprint(cfg) -> tuple:
+    """Semantics-affecting JoinConfig fields: any change is a different
+    sampling process, so its pair decisions are not replayed."""
+    return (cfg.n_clusters_left, cfg.n_clusters_right, cfg.xi,
+            cfg.min_sample, cfg.lb, cfg.ub, cfg.max_refine, cfg.vote,
+            cfg.sim_bandwidth, cfg.kmeans_iters, cfg.seed)
 
 
 @dataclasses.dataclass
@@ -67,6 +86,18 @@ class SelObservation:
     version: int
     selectivity: float
     tokens_per_call: float
+
+
+@dataclasses.dataclass
+class JoinDecisionMemo:
+    """One join predicate's full pair-mask at one (left, right) version
+    pair.  Pair ids reindex under ANY mutation of either side, so these
+    entries are cleared outright (never patched) — the versions are stored
+    only as a defensive replay gate."""
+    left_version: int
+    right_version: int
+    pair_mask: np.ndarray        # (|L|, |R|) bool
+    fingerprint: tuple           # join_fingerprint of the run
 
 
 @dataclasses.dataclass
@@ -93,6 +124,9 @@ class SessionMemo:
         self._decisions: Dict[tuple, DecisionMemo] = {}
         self._selectivity: Dict[tuple, SelObservation] = {}
         self._pilots: Dict[tuple, PredStats] = {}
+        # join pair decisions keyed (left, right, oracle id, fingerprint) —
+        # replayed whole, cleared whole (docs/caching.md invalidation rules)
+        self._join_decisions: Dict[tuple, JoinDecisionMemo] = {}
         # strong refs ONLY for oracles with stored entries (decisions /
         # pilots / selectivities are keyed by id(), which must stay stable);
         # mere sightings are weak so a session that never stores anything —
@@ -106,7 +140,12 @@ class SessionMemo:
 
     # ----------------------------------------------------------- plumbing
     def _pred_key(self, table: str, oracle) -> tuple:
-        """Key for STORING an entry: pins a strong oracle reference."""
+        """Key for STORING an entry: pins a strong oracle reference.
+
+        Service-layer batching proxies resolve to the oracle they wrap
+        (``oracle_identity``), so scheduled and serial collections share
+        one identity."""
+        oracle = oracle_identity(oracle)
         oid = id(oracle)
         self._oracles[oid] = oracle
         self.note_sighting(table, oracle)
@@ -134,7 +173,7 @@ class SessionMemo:
 
     def note_sighting(self, table: str, oracle) -> None:
         """Record that ``oracle`` answered tuple ids of ``table`` (weak)."""
-        self._note(self._sightings, table, oracle)
+        self._note(self._sightings, table, oracle_identity(oracle))
 
     def oracles_for(self, table: str) -> list:
         """Every live oracle this memo has seen touch ``table``
@@ -142,10 +181,53 @@ class SessionMemo:
         return self._live(self._sightings, table)
 
     def note_pair_oracle(self, table: str, oracle) -> None:
-        self._note(self._pair_sightings, table, oracle)
+        self._note(self._pair_sightings, table, oracle_identity(oracle))
 
     def pair_oracles_for(self, table: str) -> list:
         return self._live(self._pair_sightings, table)
+
+    # -------------------------------------------------- join decisions
+    def _join_key(self, left: str, right: str, oracle, cfg) -> tuple:
+        oracle = oracle_identity(oracle)
+        return (left, right, id(oracle), join_fingerprint(cfg))
+
+    def lookup_join(self, left_handle, right_handle, oracle,
+                    cfg) -> Optional[JoinDecisionMemo]:
+        """Replayable pair decisions for one join, or None.
+
+        Keyed by both table versions: mutations clear join entries
+        outright (``drop_joins``), so a surviving entry always matches —
+        the version check is a defensive invariant, not a patch path."""
+        jm = self._join_decisions.get(
+            self._join_key(left_handle.name, right_handle.name, oracle, cfg))
+        if jm is None:
+            return None
+        if (jm.left_version != left_handle.version
+                or jm.right_version != right_handle.version
+                or jm.pair_mask.shape != (len(left_handle),
+                                          len(right_handle))):
+            return None
+        return jm
+
+    def record_join(self, left_handle, right_handle, oracle, cfg,
+                    pair_mask: np.ndarray) -> None:
+        key = self._join_key(left_handle.name, right_handle.name, oracle,
+                             cfg)
+        self._oracles[key[2]] = oracle_identity(oracle)  # pin id stability
+        self._join_decisions[key] = JoinDecisionMemo(
+            left_version=left_handle.version,
+            right_version=right_handle.version,
+            pair_mask=np.asarray(pair_mask, bool).copy(),
+            fingerprint=key[3])
+
+    def drop_joins(self, table: str) -> int:
+        """Mutation of ``table``: drop every join decision touching it on
+        either side (pair ids reindex / payloads changed — same rule as
+        the pair-oracle memo clear).  Returns entries dropped."""
+        stale = [k for k in self._join_decisions if table in k[:2]]
+        for k in stale:
+            del self._join_decisions[k]
+        return len(stale)
 
 
 class ReuseView:
@@ -172,7 +254,7 @@ class ReuseView:
             return None
         # read-only: no strong ref is pinned (record()/store_pilot() pin
         # one the moment an entry is actually stored)
-        key = (self.handle.name, id(leaf.oracle))
+        key = (self.handle.name, id(oracle_identity(leaf.oracle)))
         # decisions are kept per config fingerprint: runs under different
         # semantics (xi, vote, seed, ...) never clobber each other
         dm = self.memo._decisions.get(key + (cfg_fingerprint(cfg),))
@@ -244,7 +326,7 @@ class ReuseView:
         (pilot-probed, normally costed) and only the executor replays."""
         if not self.reuse_stats:
             return None
-        key = (self.handle.name, id(leaf.oracle))
+        key = (self.handle.name, id(oracle_identity(leaf.oracle)))
         hit = self.lookup(leaf, cfg)
         if hit is not None and hit.full:
             obs = self.memo._selectivity.get(key)

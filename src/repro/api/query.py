@@ -24,7 +24,7 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from repro.api.memo import ReuseView
+from repro.api.memo import ReuseView, oracle_identity
 from repro.api.policy import ExecutionPolicy, OracleBudgetError
 from repro.core.baselines import (BaselineResult, bargain_filter,
                                   lotus_filter, reference_filter)
@@ -134,6 +134,19 @@ class Query:
                 f"of {pol.max_oracle_calls} (closed-form pre-flight check; "
                 "raise max_oracle_calls or shrink the query)")
 
+    def worst_case_calls(self, policy: Optional[ExecutionPolicy] = None
+                         ) -> float:
+        """Closed-form worst-case oracle spend of ``collect`` under the
+        resolved policy — zero oracle calls to compute.  This is the same
+        estimate the ``max_oracle_calls`` pre-flight check uses; the
+        service layer aggregates it per tenant for admission control."""
+        pol = self._resolve(policy)
+        self._validate(pol)
+        return self._estimate_calls(pol)
+
+    def _estimate_calls(self, pol: ExecutionPolicy) -> float:
+        raise NotImplementedError
+
 
 class FilterQuery(Query):
     """A lazy semantic filter over one table.
@@ -157,6 +170,11 @@ class FilterQuery(Query):
         # pilot probes keyed by (seed, pilot_size) — the only policy knobs
         # that change which ids the pilot draws; see _prepare()
         self._pilot_cache: Dict[tuple, Dict] = {}
+        # raw fresh probes keyed by (seed, pilot_size, table version): the
+        # truthful PredStats to reuse when a re-plan (different reuse
+        # knobs, a scheduled clone) would otherwise re-probe a memo-warm
+        # oracle and report pilot_calls=0 / default tokens (see _prepare)
+        self._fresh_pilots: Dict[tuple, Dict] = {}
 
     # ------------------------------------------------------- composition
     def _combine(self, op, other: "FilterQuery") -> "FilterQuery":
@@ -211,7 +229,7 @@ class FilterQuery(Query):
                          reuse_decisions=pol.reuse_memo,
                          reuse_stats=pol.reuse_stats)
 
-    def _worst_case_calls(self, pol: ExecutionPolicy) -> float:
+    def _estimate_calls(self, pol: ExecutionPolicy) -> float:
         """Closed-form worst case (no live-set shrinkage), zero oracle
         calls: per-leaf first-round estimate at full n, plus the pilot.
 
@@ -282,34 +300,50 @@ class FilterQuery(Query):
         if pilot_stats is None:
             view = self._reuse_view(pol)
             known: Dict[str, Any] = {}
-            leaf_by_name = {}
-            if view is not None:
-                cfg = pol.to_csv_config()
-                for leaf in self.expr.leaves():
-                    if leaf.name in known or leaf.name in leaf_by_name:
-                        continue
-                    leaf_by_name[leaf.name] = leaf
+            leaf_by_name: Dict[str, Any] = {}
+            cfg = pol.to_csv_config()
+            for leaf in self.expr.leaves():
+                if leaf.name in leaf_by_name:
+                    continue
+                leaf_by_name[leaf.name] = leaf
+                if view is not None:
                     ps = view.pred_stats(
                         leaf, leaf.cfg if leaf.cfg is not None else cfg,
                         pol.seed, pol.pilot_size)
                     if ps is not None:
                         known[leaf.name] = ps
+            # pilot-accounting fix: a re-plan that resolves a different
+            # cache key (reuse knobs toggled, a scheduled clone of the
+            # query) must NOT probe again — by then the oracle memo is
+            # warm, so a fresh probe would report pilot_calls=0 and fall
+            # back to the default tokens_per_call, corrupting both the
+            # cost ordering and the accounting.  Fresh probes are cached
+            # under the only knobs that change the id draw and reused as
+            # recorded (truthful calls/tokens).
+            probed = self._fresh_pilots.setdefault(
+                (pol.seed, pol.pilot_size,
+                 getattr(self.handle, "version", 0)), {})
             snap = _snapshot(self._oracles())
-            fresh = ex.pilot(self.expr, skip=known)
+            fresh = ex.pilot(self.expr, skip=set(known) | set(probed))
             for oracle, before in snap:
                 self.session._absorb(oracle.stats.delta(before))
+            probed.update(fresh)
             if view is not None:
-                for name, ps in fresh.items():
-                    view.store_pilot(leaf_by_name[name], pol.seed,
-                                     pol.pilot_size, ps)
-            pilot_stats = {**known, **fresh}
+                for name, ps in probed.items():
+                    if name not in known:
+                        view.store_pilot(leaf_by_name[name], pol.seed,
+                                         pol.pilot_size, ps)
+            pilot_stats = {name: known.get(name) or probed[name]
+                           for name in leaf_by_name}
             self._pilot_cache[key] = pilot_stats
         return ex.prepare(self.expr, pilot_stats=pilot_stats)
 
     def _oracles(self) -> list:
         """Distinct leaf oracles (LLM spend only; the proxy is accounted
-        separately in ``session.proxy_stats``)."""
-        return list({id(leaf.oracle): leaf.oracle
+        separately in ``session.proxy_stats``).  Dedup is by memo identity
+        so two scheduler proxies over one oracle can never double-count a
+        stats delta."""
+        return list({id(oracle_identity(leaf.oracle)): leaf.oracle
                      for leaf in self.expr.leaves()}.values())
 
     def explain(self, policy: Optional[ExecutionPolicy] = None) -> Explain:
@@ -350,7 +384,7 @@ class FilterQuery(Query):
     def collect(self, policy: Optional[ExecutionPolicy] = None) -> QueryResult:
         pol = self._resolve(policy)
         self._validate(pol)
-        self._check_budget(pol, self._worst_case_calls(pol))
+        self._check_budget(pol, self._estimate_calls(pol))
         t0 = time.time()
         # sight every leaf oracle as having touched this table EVEN when
         # reuse is off: TableHandle.update() must be able to invalidate
@@ -422,9 +456,15 @@ class JoinQuery(Query):
                 "CSV-backed join runs under 'csv' (UniVote) or 'csv-sim' "
                 "(SimVote pair embeddings)")
 
-    def _block_estimate(self, pol: ExecutionPolicy) -> float:
+    def _estimate_calls(self, pol: ExecutionPolicy) -> float:
         """First-round closed form: every cluster-pair block pays at least
-        one ``min_sample`` probe, capped by the total pair count."""
+        one ``min_sample`` probe, capped by the total pair count.  A join
+        whose pair decisions replay from the session memo is budgeted at
+        zero (same accounting rule as replayable filter leaves)."""
+        if (pol.reuse_memo and self.session.memo.lookup_join(
+                self.left, self.right, self.oracle,
+                pol.to_join_config()) is not None):
+            return 0.0
         cfg = pol.to_join_config()
         n_pairs = len(self.left) * len(self.right)
         n_blocks = (min(cfg.n_clusters_left, len(self.left))
@@ -436,7 +476,7 @@ class JoinQuery(Query):
     def explain(self, policy: Optional[ExecutionPolicy] = None) -> Explain:
         pol = self._resolve(policy)
         self._validate(pol)
-        est = self._block_estimate(pol)
+        est = self._estimate_calls(pol)
         n_pairs = len(self.left) * len(self.right)
         name = f"{self.left.name} JOIN {self.right.name}"
         nodes = [NodeEstimate(name=name, est_live_in=float(n_pairs),
@@ -451,13 +491,32 @@ class JoinQuery(Query):
     def collect(self, policy: Optional[ExecutionPolicy] = None) -> QueryResult:
         pol = self._resolve(policy)
         self._validate(pol)
-        self._check_budget(pol, self._block_estimate(pol))
+        self._check_budget(pol, self._estimate_calls(pol))
         t0 = time.time()
         # pair-oracle sightings: mutations of either side must clear this
         # oracle's memo outright (pair ids reindex; see docs/caching.md)
         self.session.memo.note_pair_oracle(self.left.name, self.oracle)
         self.session.memo.note_pair_oracle(self.right.name, self.oracle)
         cfg = pol.to_join_config()
+        if pol.reuse_memo:
+            jm = self.session.memo.lookup_join(self.left, self.right,
+                                               self.oracle, cfg)
+            if jm is not None:
+                # replay: same predicate, same join semantics, both tables
+                # unchanged — zero oracle calls, bit-identical pair mask
+                raw = JoinResult(
+                    pair_mask=jm.pair_mask.copy(), n_llm_calls=0,
+                    input_tokens=0, output_tokens=0, n_voted=0,
+                    n_fallback=0, refine_rounds=0,
+                    total_time_s=time.time() - t0, round_log=[])
+                return QueryResult(
+                    kind="join", pair_mask=raw.pair_mask, n_llm_calls=0,
+                    pilot_calls=0, n_proxy_calls=0, input_tokens=0,
+                    output_tokens=0,
+                    order=[f"{self.left.name} JOIN {self.right.name}"],
+                    node_log=[], round_log={"join": []},
+                    total_time_s=raw.total_time_s, policy=pol, raw=raw,
+                    n_replayed=int(raw.pair_mask.size))
         assign_l = assign_r = None
         if pol.reuse_clustering:
             assign_l = self.left.precluster(cfg.n_clusters_left, cfg.seed)
@@ -469,6 +528,12 @@ class JoinQuery(Query):
                                    assign_right=assign_r)
         for oracle, before in snap:
             self.session._absorb(oracle.stats.delta(before))
+        if pol.reuse_memo:
+            # record for later replay (mirrors the filter-side rule:
+            # recording is skipped only when reuse is pinned off — the
+            # legacy shim sessions must never accumulate state)
+            self.session.memo.record_join(self.left, self.right,
+                                          self.oracle, cfg, raw.pair_mask)
         return QueryResult(
             kind="join", pair_mask=raw.pair_mask,
             n_llm_calls=raw.n_llm_calls, pilot_calls=0, n_proxy_calls=0,

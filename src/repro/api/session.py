@@ -20,6 +20,7 @@ the ``PlanExecutor`` table protocol (``embeddings``, ``precluster``,
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -224,6 +225,11 @@ class Session:
         self._oracles: Dict[str, Tuple[Any, Any]] = {}
         self._anon_tables = 0
         self._anon_preds = 0
+        # shared-state guard for concurrent collects (repro.service): the
+        # precluster cache and the run-level stats aggregates are the only
+        # session state written from query threads
+        self._lock = threading.Lock()
+        self._scheduler = None  # lazy repro.service.QueryScheduler
 
     # -------------------------------------------------------------- tables
     def table(self, texts: Optional[Sequence[str]] = None, embeddings=None,
@@ -305,14 +311,20 @@ class Session:
         """
         key = (handle.name, int(n_clusters), int(seed))
         if key not in self._assign_cache:
-            assign, _ = handle._table.precluster_full(n_clusters, seed)
-            self._assign_cache[key] = assign
-            # per-cluster dirty versions start at the clustering's birth
-            # version: decisions memoized from here on see clean clusters
-            # until append()/update() touches them
-            handle._dirty.setdefault(
-                (int(n_clusters), int(seed)),
-                np.full(int(n_clusters), handle.version, dtype=np.int64))
+            # serialized: concurrent service queries on one table must not
+            # race the (deterministic but expensive) k-means fit
+            with self._lock:
+                if key not in self._assign_cache:
+                    assign, _ = handle._table.precluster_full(n_clusters,
+                                                              seed)
+                    self._assign_cache[key] = assign
+                    # per-cluster dirty versions start at the clustering's
+                    # birth version: decisions memoized from here on see
+                    # clean clusters until append()/update() touches them
+                    handle._dirty.setdefault(
+                        (int(n_clusters), int(seed)),
+                        np.full(int(n_clusters), handle.version,
+                                dtype=np.int64))
         return self._assign_cache[key]
 
     def _invalidate_oracles(self, table_name: str, ids: np.ndarray) -> None:
@@ -333,14 +345,49 @@ class Session:
         """Pair (join) oracles memoize by pair id ``i * len(right) + j``:
         growing the right table reindexes every pair and updating either
         side changes pair payloads, so ANY mutation clears the whole memo
-        of every join oracle sighted on the table."""
+        of every join oracle sighted on the table — and the session-level
+        join decision memo entries touching the table on either side."""
         for oracle in self.memo.pair_oracles_for(table_name):
             if hasattr(oracle, "memo_clear"):
                 oracle.memo_clear()
+        self.memo.drop_joins(table_name)
 
     # ---------------------------------------------------------- accounting
     def _absorb(self, delta: OracleStats) -> None:
-        self.stats.merge(delta)
+        with self._lock:
+            self.stats.merge(delta)
 
     def _absorb_proxy(self, delta: OracleStats) -> None:
-        self.proxy_stats.merge(delta)
+        with self._lock:
+            self.proxy_stats.merge(delta)
+
+    # ------------------------------------------------- concurrent service
+    @property
+    def scheduler(self):
+        """The session's concurrent query scheduler (repro.service),
+        created on first use.  ``submit``/``gather`` are the front door;
+        reach for the scheduler itself for ``holding()`` (batch several
+        submissions into one admission wave) or ``stats``."""
+        if self._scheduler is None:
+            from repro.service.scheduler import QueryScheduler
+            self._scheduler = QueryScheduler(self)
+        return self._scheduler
+
+    def submit(self, query, policy: Optional[ExecutionPolicy] = None):
+        """Schedule a query for concurrent execution; returns a
+        ``QueryTicket`` (docs/service.md).  Oracle batches of all in-flight
+        queries are merged into cross-query dispatches; per-query masks and
+        call counts stay bit-identical to serial ``collect()``."""
+        return self.scheduler.submit(query, policy=policy)
+
+    def gather(self, *tickets):
+        """Wait for submitted queries; returns their ``QueryResult``s (all
+        outstanding tickets when called without arguments)."""
+        return self.scheduler.gather(*tickets)
+
+    def close(self) -> None:
+        """Shut down the scheduler's worker threads (no-op when the
+        concurrent service was never used)."""
+        if self._scheduler is not None:
+            self._scheduler.close()
+            self._scheduler = None

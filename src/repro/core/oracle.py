@@ -264,14 +264,24 @@ class SyncOracleDispatcher:
 class AsyncOracleDispatcher:
     """Single worker thread, strict FIFO: batches are evaluated in submission
     order, so memoization and any stateful oracle RNG (SyntheticOracle's flip
-    stream) behave bit-identically to synchronous dispatch."""
+    stream) behave bit-identically to synchronous dispatch.
 
-    def __init__(self, oracle):
+    ``oracle`` may be omitted when every ``submit`` names its own — the
+    multi-oracle form the service scheduler uses to drive one merged
+    cross-query dispatch through a single FIFO lane (per-oracle evaluation
+    order is then exactly submission order, preserving each query's
+    memo/flip-stream state)."""
+
+    def __init__(self, oracle=None):
         self.oracle = oracle
         self._pool = ThreadPoolExecutor(max_workers=1)
 
-    def submit(self, ids) -> Future:
-        return self._pool.submit(self.oracle, np.asarray(ids))
+    def submit(self, ids, oracle=None) -> Future:
+        target = oracle if oracle is not None else self.oracle
+        if target is None:
+            raise ValueError("dispatcher built without a default oracle; "
+                             "pass oracle= to submit()")
+        return self._pool.submit(target, np.asarray(ids))
 
     def close(self):
         self._pool.shutdown(wait=True)

@@ -5,6 +5,13 @@
 Boots the backbone on the mesh, the embedding encoder, and answers
 semantic-filter requests through the CSV driver with the batched engine.
 On restart, the oracle call-cache checkpoint avoids re-invoking the LLM.
+
+``--service K`` switches to the concurrent front end (repro.service): K
+predicates become K ModelOracles over one shared engine, submitted
+together so their per-round oracle batches merge into cross-query
+dispatches, and the whole session (memo + caches + oracle call-caches) is
+checkpointed through a SessionStore instead of the ad-hoc JSON cache —
+restart the same command and every predicate replays at zero LLM calls.
 """
 from __future__ import annotations
 
@@ -24,6 +31,45 @@ from repro.embeddings import EmbeddingModel
 from repro.models import lm
 from repro.serving import ServingEngine
 
+SERVICE_PREDICATES = [
+    "the review is positive",
+    "the review praises the acting",
+    "the review discusses the plot",
+    "the review would recommend the movie",
+]
+
+
+def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str):
+    """K predicates through the concurrent service over one engine."""
+    from repro.api import ExecutionPolicy, Session
+    from repro.service import FilterService
+
+    preds = (SERVICE_PREDICATES * ((k - 1) // len(SERVICE_PREDICATES) + 1))[:k]
+    sess = Session(policy=ExecutionPolicy(n_clusters=4, min_sample=25))
+    table = sess.table(embeddings=embeddings, name="reviews")
+    for i, text in enumerate(preds):
+        sess.register_oracle(f"p{i}", ModelOracle(engine, tok, text,
+                                                  ds.texts))
+    service = FilterService(sess, store_dir=state_dir)
+    if service.store.exists():
+        print(f"[serve] restore: {service.restore()}")
+    service.register_tenant("default", sess.policy)
+    with sess.scheduler.holding():
+        tickets = [service.submit("default", table.filter(f"p{i}"),
+                                  label=f"p{i}") for i in range(k)]
+    results = service.gather(*tickets)
+    for i, (text, r) in enumerate(zip(preds, results)):
+        print(f"[serve] p{i} {text!r}: {int(r.mask.sum())}/{len(table)} "
+              f"pass; {r.n_llm_calls} LLM calls, {r.n_replayed} replayed")
+    merge = sess.scheduler.stats.merge
+    print(f"[serve] merged dispatches: {merge.n_invocations}, mean "
+          f"{merge.mean_batch_size:.0f} ids/invocation "
+          f"(merge factor {merge.merge_factor:.1f}); engine={engine.stats}")
+    service.checkpoint()
+    print(f"[serve] session checkpointed to {state_dir} — rerun to replay "
+          "at 0 LLM calls")
+    service.close()
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -33,6 +79,12 @@ def main():
     ap.add_argument("--predicate", default="the review is positive")
     ap.add_argument("--vote", default="csv", choices=["csv", "csv-sim"])
     ap.add_argument("--cache", default="/tmp/repro_serve_cache.json")
+    ap.add_argument("--service", type=int, default=0, metavar="K",
+                    help="serve K concurrent predicates through "
+                         "repro.service (cross-query batching + "
+                         "restartable session store)")
+    ap.add_argument("--state-dir", default="/tmp/repro_serve_state",
+                    help="SessionStore directory for --service mode")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -41,14 +93,21 @@ def main():
     tok = HashTokenizer(cfg.vocab_size)
 
     ds = make_dataset("imdb_review", n=args.n, seed=0)
+    encoder = EmbeddingModel(smoke_config("e5-large"), max_len=32)
+    embeddings = encoder.encode(ds.texts)
+
+    if args.service > 0:
+        serve_concurrent(engine, tok, ds, embeddings, args.service,
+                         args.state_dir)
+        return
+
     oracle = ModelOracle(engine, tok, args.predicate, ds.texts)
     cache_path = pathlib.Path(args.cache)
     if cache_path.exists():
         oracle.memo_restore(json.loads(cache_path.read_text()))
         print(f"[serve] restored {len(oracle.memo_snapshot())} cached calls")
 
-    encoder = EmbeddingModel(smoke_config("e5-large"), max_len=32)
-    table = SemanticTable(texts=ds.texts, embeddings=encoder.encode(ds.texts))
+    table = SemanticTable(texts=ds.texts, embeddings=embeddings)
     r = table.sem_filter(oracle, method=args.vote,
                          cfg=CSVConfig(n_clusters=4, min_sample=25))
     cache_path.write_text(json.dumps(

@@ -1,0 +1,31 @@
+"""repro.service — concurrent, restartable semantic-filter serving.
+
+Three layers over the lazy ``repro.api`` surface (docs/service.md):
+
+- ``QueryScheduler`` (scheduler.py): drives many submitted queries
+  concurrently and merges their per-round oracle batches into cross-query
+  dispatches — mean batch size grows with concurrency, per-query masks and
+  call counts stay bit-identical to serial ``collect()``.
+- ``SessionStore`` (store.py): session memo + caches to disk; a reloaded
+  session replays previously-collected queries at zero oracle calls.
+- ``FilterService`` (server.py): multi-tenant front end with aggregate
+  ``max_oracle_calls`` admission control.
+
+    from repro.service import FilterService
+    svc = FilterService(session, store_dir=".../state")
+    svc.register_tenant("t0", ExecutionPolicy(max_oracle_calls=10_000))
+    with session.scheduler.holding():
+        tickets = [svc.submit("t0", q) for q in queries]
+    results = svc.gather(*tickets)
+"""
+from repro.service.scheduler import (BatchingOracleProxy, QueryScheduler,
+                                     QueryTicket, ServiceStats)
+from repro.service.server import (FilterService, TenantAccount,
+                                  TenantBudgetError)
+from repro.service.store import RestoreReport, SessionStore, STORE_SCHEMA
+
+__all__ = [
+    "BatchingOracleProxy", "QueryScheduler", "QueryTicket", "ServiceStats",
+    "FilterService", "TenantAccount", "TenantBudgetError",
+    "RestoreReport", "SessionStore", "STORE_SCHEMA",
+]

@@ -1,0 +1,430 @@
+"""Concurrent query scheduler: cross-query oracle batching with per-query
+bit-identity.
+
+``Session.submit()`` hands a lazy ``FilterQuery``/``JoinQuery`` to this
+scheduler instead of collecting it inline.  Each submission becomes a
+*task* whose ``collect()`` runs on its own worker thread, with every leaf
+oracle rebound to a ``BatchingOracleProxy``: the proxy parks the calling
+thread and enqueues the batch with the scheduler instead of evaluating it.
+The scheduler loop is a barrier tick —
+
+    when every in-flight task has a pending oracle batch, merge ALL
+    pending batches (ordered by task submission, FIFO within a task) into
+    one cross-query dispatch,
+
+so the mean ids-per-invocation grows with concurrency (the serving layer
+sees one large prompt wave instead of per-query trickles) while each
+query's own oracle still evaluates exactly the batches, in exactly the
+order, a serial ``collect()`` would produce.  Bit-identity argument:
+
+- the CSV driver RNG, the pilot draw, and each oracle's flip stream are
+  all per-query state — merging only *groups* evaluations, it never
+  reorders them within a query (the merged dispatch drains through a
+  single-lane ``AsyncOracleDispatcher``, strict FIFO);
+- cross-query coupling exists ONLY through shared oracle objects (the
+  session memo keys decisions/pilots/selectivities by oracle identity), so
+  the scheduler defers any task whose leaf oracles intersect an in-flight
+  task's — conflicting tasks run in submission order, exactly the serial
+  interleaving, which is what lets a resubmitted predicate replay at zero
+  calls under the scheduler too;
+- shared session state written from task threads (precluster cache, run
+  aggregates) is lock-guarded in ``Session``.
+
+Mutating a table (``append``/``update``) while queries are in flight is
+not supported — mutate between ``gather()`` and the next ``submit()``.
+
+See docs/service.md for the full model.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.memo import oracle_identity
+from repro.api.query import FilterQuery, JoinQuery
+from repro.core.oracle import AsyncOracleDispatcher
+from repro.plan.expr import And, Expr, Not, Or, Pred
+from repro.serving.batcher import DispatchMergeStats
+
+
+class BatchingOracleProxy:
+    """Stand-in for one task's leaf oracle: routes every batch through the
+    scheduler (park -> merge -> evaluate), delegates everything else —
+    ``stats``, ``scope``, ``memo_*`` — to the wrapped oracle.
+
+    ``memo_target`` is the wrapped oracle, so session-memo entries
+    recorded through the proxy replay for serial collects of the same
+    predicate and vice versa (see ``repro.api.memo.oracle_identity``).
+    """
+
+    def __init__(self, scheduler: "QueryScheduler", task: "_Task", inner):
+        while isinstance(inner, BatchingOracleProxy):
+            inner = inner.inner  # resubmitted query: never chain proxies
+        self.inner = inner
+        self.memo_target = oracle_identity(inner)
+        self._scheduler = scheduler
+        self._task = task
+
+    def __call__(self, ids) -> np.ndarray:
+        return self._scheduler._evaluate(self._task, self.inner, ids)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def __repr__(self):
+        return f"BatchingOracleProxy({self.inner!r})"
+
+
+@dataclasses.dataclass
+class _OracleRequest:
+    task: "_Task"
+    oracle: object            # the UNWRAPPED oracle to evaluate with
+    ids: np.ndarray
+    future: Future
+
+
+class _Task:
+    """One scheduled query: proxied clone, worker thread, pending queue."""
+
+    def __init__(self, index: int, label: str, policy):
+        self.index = index
+        self.label = label
+        self.policy = policy
+        self.query = None                  # proxied clone, set at submit
+        self.oracle_refs: List = []        # strong refs -> stable ids
+        self.oracle_ids: frozenset = frozenset()
+        self.pending: deque = deque()
+        self.future: Future = Future()
+        self.thread: Optional[threading.Thread] = None
+        self.finished = False
+        self.deferred = False
+
+
+class QueryTicket:
+    """Handle to one submitted query (returned by ``Session.submit``)."""
+
+    def __init__(self, scheduler: "QueryScheduler", task: _Task):
+        self._scheduler = scheduler
+        self._task = task
+        self._gathered = False
+
+    @property
+    def label(self) -> str:
+        return self._task.label
+
+    @property
+    def index(self) -> int:
+        return self._task.index
+
+    def done(self) -> bool:
+        return self._task.future.done()
+
+    @property
+    def future(self) -> Future:
+        """The underlying completion future — for callbacks and
+        exception inspection; consume results via ``result()``/
+        ``gather()`` (they also prune scheduler bookkeeping)."""
+        return self._task.future
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(future)`` when the query finishes (immediately if it
+        already has).  The service front end settles tenant budgets here,
+        so settlement cannot be skipped by consuming the ticket directly."""
+        self._task.future.add_done_callback(fn)
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until the query completes; returns its ``QueryResult`` or
+        re-raises the error its collect() hit.  A consumed ticket is
+        dropped from the scheduler's bookkeeping (later no-arg ``gather``
+        calls won't re-deliver it)."""
+        if not self.done() and self._scheduler._hold > 0:
+            # dispatch is paused: waiting here would deadlock — the parked
+            # oracle batches can never be served until the hold is released
+            raise RuntimeError(
+                "ticket.result() inside scheduler.holding() would wait "
+                "forever (dispatch is paused); exit the holding() block "
+                "first")
+        try:
+            return self._task.future.result(timeout=timeout)
+        finally:
+            if self._task.future.done():
+                self._scheduler._discard(self)
+
+    def __repr__(self):
+        state = "done" if self.done() else "in-flight"
+        return f"QueryTicket({self.label!r}, {state})"
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Scheduler-level accounting (per-query accounting stays on the
+    oracles / QueryResults, untouched by merging)."""
+    merge: DispatchMergeStats = dataclasses.field(
+        default_factory=DispatchMergeStats)
+    n_submitted: int = 0
+    n_deferred: int = 0          # tasks held back by an oracle conflict
+    n_completed: int = 0
+    n_failed: int = 0
+
+
+def _map_leaves(expr: Expr, fn) -> Expr:
+    """Rebuild an expression with every Pred leaf passed through ``fn``."""
+    if isinstance(expr, Pred):
+        return fn(expr)
+    if isinstance(expr, Not):
+        return Not(_map_leaves(expr.child, fn))
+    if isinstance(expr, And):
+        return And(*[_map_leaves(c, fn) for c in expr.children])
+    if isinstance(expr, Or):
+        return Or(*[_map_leaves(c, fn) for c in expr.children])
+    raise TypeError(f"unknown Expr node {type(expr).__name__}")
+
+
+def _chain(src: Future, dst: Future) -> None:
+    def _done(f: Future):
+        e = f.exception()
+        if e is not None:
+            dst.set_exception(e)
+        else:
+            dst.set_result(f.result())
+    src.add_done_callback(_done)
+
+
+class QueryScheduler:
+    """Barrier-tick scheduler over one Session (see module docstring).
+
+    Use through ``Session.submit()``/``gather()``; ``holding()`` pauses
+    dispatch so a burst of submissions merges from its very first round:
+
+        with sess.scheduler.holding():
+            tickets = [sess.submit(q) for q in queries]
+        results = sess.gather(*tickets)
+    """
+
+    def __init__(self, session):
+        self.session = session
+        self.stats = ServiceStats()
+        self._cv = threading.Condition()
+        self._running: List[_Task] = []
+        self._deferred: List[_Task] = []
+        self._tickets: List[QueryTicket] = []
+        self._hold = 0
+        self._closed = False
+        self._next_index = 0
+        # one FIFO lane for ALL queries' oracles: the merged dispatch
+        # drains through it in deterministic (task, submission) order
+        self._dispatcher = AsyncOracleDispatcher()
+        self._loop_thread = threading.Thread(
+            target=self._loop, daemon=True, name="csv-service-scheduler")
+        self._loop_thread.start()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, query, policy=None,
+               label: Optional[str] = None) -> QueryTicket:
+        """Schedule a query; returns immediately with a ticket.
+
+        The query is cloned with every leaf oracle rebound to a batching
+        proxy; the original query object stays collectable serially.
+        Tasks whose oracles overlap an in-flight task are deferred until
+        it finishes (submission order — serial semantics for the shared
+        predicate, including memo replay)."""
+        if getattr(query, "session", None) is not self.session:
+            raise ValueError("query belongs to a different session")
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            task = _Task(self._next_index,
+                         label or f"q{self._next_index}", policy)
+            self._next_index += 1
+        task.query = self._instrument(task, query)
+        ticket = QueryTicket(self, task)
+        with self._cv:
+            self.stats.n_submitted += 1
+            self._tickets.append(ticket)
+            blockers = set()
+            for t in self._running + self._deferred:
+                blockers |= t.oracle_ids
+            if task.oracle_ids & blockers:
+                task.deferred = True
+                self.stats.n_deferred += 1
+                self._deferred.append(task)
+            else:
+                self._start_locked(task)
+            self._cv.notify_all()
+        return ticket
+
+    def _instrument(self, task: _Task, query):
+        """Clone with proxied oracles (one proxy per distinct oracle)."""
+        proxies: Dict[int, BatchingOracleProxy] = {}
+
+        def proxy_for(oracle) -> BatchingOracleProxy:
+            ident = oracle_identity(oracle)
+            key = id(ident)
+            if key not in proxies:
+                proxies[key] = BatchingOracleProxy(self, task, oracle)
+                task.oracle_refs.append(ident)
+            return proxies[key]
+
+        if isinstance(query, FilterQuery):
+            expr = _map_leaves(
+                query.expr,
+                lambda p: Pred(p.name, proxy_for(p.oracle), p.cfg))
+            clone = FilterQuery(self.session, query.handle, expr,
+                                policy=query.policy, proxy=query.proxy)
+            # share the pilot caches: a re-plan of the clone must reuse
+            # probes the original already paid for (and vice versa), not
+            # re-probe a memo-warm oracle — see FilterQuery._prepare
+            clone._pilot_cache = query._pilot_cache
+            clone._fresh_pilots = query._fresh_pilots
+        elif isinstance(query, JoinQuery):
+            clone = JoinQuery(self.session, query.left, query.right,
+                              proxy_for(query.oracle), policy=query.policy)
+        else:
+            raise TypeError(
+                f"cannot schedule {type(query).__name__}; expected a "
+                "FilterQuery or JoinQuery")
+        task.oracle_ids = frozenset(id(o) for o in task.oracle_refs)
+        return clone
+
+    def _start_locked(self, task: _Task) -> None:
+        self._running.append(task)
+        task.thread = threading.Thread(
+            target=self._run_task, args=(task,), daemon=True,
+            name=f"csv-service-{task.label}")
+        task.thread.start()
+
+    def _run_task(self, task: _Task) -> None:
+        try:
+            result = task.query.collect(task.policy)
+        except BaseException as e:
+            failed = True
+            task.future.set_exception(e)
+        else:
+            failed = False
+            task.future.set_result(result)
+        finally:
+            with self._cv:
+                task.finished = True
+                self._running.remove(task)
+                while task.pending:  # defensive: never strand a waiter
+                    task.pending.popleft().future.set_exception(
+                        RuntimeError("task exited with unserved oracle "
+                                     "requests"))
+                if failed:
+                    self.stats.n_failed += 1
+                else:
+                    self.stats.n_completed += 1
+                self._release_deferred_locked()
+                self._cv.notify_all()
+
+    def _release_deferred_locked(self) -> None:
+        """Start every deferred task whose oracles no longer conflict.
+        Order is preserved: a deferred task also blocks later tasks that
+        overlap it, so conflicting tasks always run in submission order."""
+        blockers = set()
+        for t in self._running:
+            blockers |= t.oracle_ids
+        still: List[_Task] = []
+        for t in self._deferred:
+            if t.oracle_ids & blockers:
+                still.append(t)
+            else:
+                self._start_locked(t)
+            blockers |= t.oracle_ids
+        self._deferred = still
+
+    # ------------------------------------------------------------ requests
+    def _evaluate(self, task: _Task, oracle, ids) -> np.ndarray:
+        """Proxy entry point: park the calling thread until the merged
+        dispatch containing this batch resolves."""
+        req = _OracleRequest(task=task, oracle=oracle,
+                             ids=np.asarray(ids), future=Future())
+        with self._cv:
+            task.pending.append(req)
+            self._cv.notify_all()
+        return req.future.result()
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    if (self._closed and not self._running
+                            and not self._deferred):
+                        return
+                    if (self._hold == 0 and self._running
+                            and all(t.pending for t in self._running)):
+                        break
+                    self._cv.wait()
+                batch: List[_OracleRequest] = []
+                for t in sorted(self._running, key=lambda t: t.index):
+                    while t.pending:
+                        batch.append(t.pending.popleft())
+            # evaluate OUTSIDE the lock: one merged dispatch, drained
+            # through the single FIFO lane in (task, submission) order
+            self.stats.merge.record([len(r.ids) for r in batch])
+            for r in batch:
+                _chain(self._dispatcher.submit(r.ids, oracle=r.oracle),
+                       r.future)
+
+    # ------------------------------------------------------------ control
+    @contextlib.contextmanager
+    def holding(self):
+        """Pause dispatch while submitting a burst, so even first-round
+        batches merge across the whole burst (deterministic merge sizes)."""
+        with self._cv:
+            self._hold += 1
+        try:
+            yield self
+        finally:
+            with self._cv:
+                self._hold = max(0, self._hold - 1)
+                self._cv.notify_all()
+
+    def _discard(self, ticket: QueryTicket) -> None:
+        """Drop a consumed ticket from the bookkeeping — a long-lived
+        service must not retain every ticket (and its result mask) ever
+        served."""
+        with self._cv:
+            ticket._gathered = True
+            self._tickets = [t for t in self._tickets if t is not ticket]
+
+    def take_outstanding(self, *tickets) -> List[QueryTicket]:
+        """Claim tickets for gathering: select the given tickets (or every
+        not-yet-gathered one), mark them gathered, and drop them from the
+        scheduler's bookkeeping.  Raises — instead of claiming and then
+        deadlocking — when dispatch is held and a selected ticket is still
+        in flight; NOT releasing the hold here is deliberate: another
+        thread may be mid-``holding()`` building its own burst, and its
+        merge guarantee must survive a concurrent gather."""
+        with self._cv:
+            targets = list(tickets) if tickets else [
+                t for t in self._tickets if not t._gathered]
+            if self._hold > 0 and any(not t.done() for t in targets):
+                raise RuntimeError(
+                    "gather() inside scheduler.holding() would wait "
+                    "forever (dispatch is paused); exit the holding() "
+                    "block first")
+            for tk in targets:
+                tk._gathered = True
+            self._tickets = [t for t in self._tickets if not t._gathered]
+        return targets
+
+    def gather(self, *tickets):
+        """Wait for the given tickets (all outstanding ones when called
+        with no arguments) and return their results in order."""
+        return [tk.result() for tk in self.take_outstanding(*tickets)]
+
+    def close(self) -> None:
+        """Drain in-flight tasks and stop the scheduler threads."""
+        with self._cv:
+            self._closed = True
+            self._hold = 0
+            self._cv.notify_all()
+        self._loop_thread.join()
+        self._dispatcher.close()

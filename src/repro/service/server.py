@@ -1,0 +1,192 @@
+"""Service front end: tenant admission control over the query scheduler.
+
+``FilterService`` is the deployable face of one session: it owns the
+scheduler, a ``SessionStore`` for checkpoint/restore, and per-tenant
+oracle budgets.  A tenant registers with an ``ExecutionPolicy`` whose
+``max_oracle_calls`` is read as the tenant's AGGREGATE budget: every
+submission's closed-form worst-case estimate (``Query.worst_case_calls``,
+zero oracle calls to compute, memo-aware — replayable queries reserve ~0)
+is reserved against it, and ``gather`` settles reservations to actual
+spend.  A submission whose reservation would overflow the remaining
+budget is rejected up front with ``TenantBudgetError`` — no partial
+execution, no oracle calls.  The per-query ``max_oracle_calls`` pre-flight
+inside ``collect()`` still applies on top (a single runaway query is
+rejected even under an ample tenant budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+from repro.api.policy import ExecutionPolicy, OracleBudgetError
+from repro.service.scheduler import QueryTicket
+from repro.service.store import RestoreReport, SessionStore
+
+
+class TenantBudgetError(OracleBudgetError):
+    """A submission's worst-case estimate overflows the tenant's
+    aggregate ``max_oracle_calls`` budget."""
+
+
+@dataclasses.dataclass
+class TenantAccount:
+    """Aggregate oracle accounting for one tenant."""
+    name: str
+    policy: ExecutionPolicy
+    reserved: float = 0.0      # worst-case estimates of in-flight queries
+    spent: int = 0             # actual calls of settled queries
+    n_admitted: int = 0
+    n_rejected: int = 0
+
+    @property
+    def budget(self) -> Optional[int]:
+        return self.policy.max_oracle_calls
+
+    @property
+    def remaining(self) -> Optional[float]:
+        if self.budget is None:
+            return None
+        return self.budget - self.spent - self.reserved
+
+
+class FilterService:
+    """Concurrent multi-tenant semantic-filter service over one Session.
+
+        service = FilterService(session, store_dir="/var/lib/csv")
+        service.register_tenant("alice", ExecutionPolicy(
+            n_clusters=4, max_oracle_calls=10_000))
+        t1 = service.submit("alice", table.filter("positive"))
+        t2 = service.submit("alice", table.filter("spam") & ...)
+        r1, r2 = service.gather(t1, t2)   # settles alice's budget
+        service.checkpoint()              # restartable: see store.py
+    """
+
+    def __init__(self, session, store_dir=None):
+        self.session = session
+        self.store = SessionStore(store_dir) if store_dir is not None \
+            else None
+        self._tenants: Dict[str, TenantAccount] = {}
+        # idempotent settlement closures of in-flight tickets, by index;
+        # each removes itself once run (done-callback or gather)
+        self._settlers: Dict[int, object] = {}
+        # admission is check-then-reserve: concurrent submits/settlements
+        # for one tenant must serialize or both could fit a budget that
+        # only holds one of them
+        self._lock = threading.Lock()
+
+    @property
+    def scheduler(self):
+        # read through the session every time: Session.close() retires its
+        # scheduler and a later submit builds a fresh one — a cached
+        # reference would keep pointing at the closed instance
+        return self.session.scheduler
+
+    # ------------------------------------------------------------- tenants
+    def register_tenant(self, name: str,
+                        policy: Optional[ExecutionPolicy] = None
+                        ) -> TenantAccount:
+        """Admit a tenant.  ``policy`` is its default execution policy AND
+        its budget: ``policy.max_oracle_calls`` caps the tenant's aggregate
+        reserved+spent oracle calls (None = unmetered)."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        acct = TenantAccount(name=name,
+                             policy=policy or self.session.policy)
+        self._tenants[name] = acct
+        return acct
+
+    def tenant(self, name: str) -> TenantAccount:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r}; register_tenant() "
+                           "first") from None
+
+    # ------------------------------------------------------------- queries
+    def submit(self, tenant: str, query,
+               policy: Optional[ExecutionPolicy] = None,
+               label: Optional[str] = None) -> QueryTicket:
+        """Admission-checked submit.  Resolution order for the effective
+        policy: explicit ``policy`` > the query's own > the tenant's."""
+        acct = self.tenant(tenant)
+        pol = policy or getattr(query, "policy", None) or acct.policy
+        est = query.worst_case_calls(pol)
+        with self._lock:
+            if acct.budget is not None and \
+                    acct.spent + acct.reserved + est > acct.budget:
+                acct.n_rejected += 1
+                raise TenantBudgetError(
+                    f"tenant {tenant!r}: worst-case {est:.0f} calls do not "
+                    f"fit the remaining budget ({acct.remaining:.0f} of "
+                    f"{acct.budget}; {acct.spent} spent, "
+                    f"{acct.reserved:.0f} reserved)")
+            acct.reserved += est
+            acct.n_admitted += 1
+        try:
+            ticket = self.scheduler.submit(query, policy=pol,
+                                           label=label or f"{tenant}/q")
+        except BaseException:
+            with self._lock:   # submission failed: hand the budget back
+                acct.reserved = max(0.0, acct.reserved - est)
+                acct.n_admitted -= 1
+            raise
+
+        settled = [False]
+
+        def _settle(future):
+            # settlement rides on query COMPLETION, not on gather(): a
+            # client consuming the ticket via result() must still free the
+            # reservation, or the tenant's budget leaks.  Idempotent —
+            # gather() also invokes it synchronously so budgets are
+            # settled the moment gather returns (done-callbacks race the
+            # woken waiter).  Failed queries settle at zero spend.
+            with self._lock:
+                self._settlers.pop(ticket.index, None)
+                if settled[0]:
+                    return
+                settled[0] = True
+                acct.reserved = max(0.0, acct.reserved - est)
+                if future.exception() is None:
+                    acct.spent += int(future.result().n_llm_calls)
+        with self._lock:
+            self._settlers[ticket.index] = _settle
+        ticket.add_done_callback(_settle)
+        return ticket
+
+    def gather(self, *tickets) -> List:
+        """Wait for tickets (all outstanding when none given).  Budget
+        settlement happens when each query finishes (also when a client
+        consumes a ticket via ``result()`` directly); the first failure
+        re-raises after every ticket is collected."""
+        results, first_error = [], None
+        for tk in self.scheduler.take_outstanding(*tickets):
+            try:
+                res = tk.result()
+            except BaseException as e:
+                res = None
+                if first_error is None:
+                    first_error = e
+            with self._lock:
+                settle = self._settlers.get(tk.index)
+            if settle is not None:
+                settle(tk.future)
+            results.append(res)
+        if first_error is not None:
+            raise first_error
+        return results
+
+    # --------------------------------------------------------- persistence
+    def checkpoint(self, tag: str = "session"):
+        if self.store is None:
+            raise ValueError("FilterService built without store_dir")
+        return self.store.save(self.session, tag)
+
+    def restore(self, tag: str = "session",
+                strict: bool = False) -> RestoreReport:
+        if self.store is None:
+            raise ValueError("FilterService built without store_dir")
+        return self.store.load(self.session, tag, strict=strict)
+
+    def close(self) -> None:
+        self.session.close()

@@ -1,2 +1,2 @@
 from repro.serving.engine import ServingEngine
-from repro.serving.batcher import BucketBatcher
+from repro.serving.batcher import BucketBatcher, DispatchMergeStats

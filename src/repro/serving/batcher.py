@@ -17,6 +17,47 @@ def bucket_len(n: int, min_bucket: int = 32, max_bucket: int = 8192) -> int:
     return min(max_bucket, max(min_bucket, 1 << math.ceil(math.log2(max(1, n)))))
 
 
+class DispatchMergeStats:
+    """Fill accounting for merged cross-query oracle dispatches.
+
+    The service scheduler's analogue of ``BucketBatcher.stats``: where the
+    bucket batcher measures how well one query's prompts fill padded device
+    batches, this measures how well concurrent queries fill each *oracle
+    invocation* — one ``record`` per merged dispatch, holding the batch
+    size each member request contributed.  ``mean_batch_size`` is the
+    number the ISSUE-5 acceptance criterion compares against the serial
+    per-invocation mean (``OracleStats.mean_batch_size``)."""
+
+    def __init__(self):
+        # running counters, NOT per-dispatch lists: a long-lived service
+        # records one entry per tick forever, so growth must be O(1)
+        self.n_invocations = 0
+        self.n_requests = 0
+        self.total_ids = 0
+        self.last_invocation = 0   # merged ids in the most recent dispatch
+
+    def record(self, sizes: Iterable[int]) -> None:
+        sizes = [int(s) for s in sizes]
+        self.n_invocations += 1
+        self.n_requests += len(sizes)
+        self.last_invocation = sum(sizes)
+        self.total_ids += self.last_invocation
+
+    @property
+    def mean_batch_size(self) -> float:
+        """Mean merged ids per dispatch (0.0 before the first record)."""
+        if not self.n_invocations:
+            return 0.0
+        return self.total_ids / self.n_invocations
+
+    @property
+    def merge_factor(self) -> float:
+        """Mean member requests folded into one dispatch (>= 1.0)."""
+        if not self.n_invocations:
+            return 0.0
+        return self.n_requests / self.n_invocations
+
+
 class BucketBatcher:
     def __init__(self, max_batch: int = 32, pad_id: int = 0,
                  min_bucket: int = 32, max_bucket: int = 8192):

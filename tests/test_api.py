@@ -467,3 +467,28 @@ def test_query_result_unified_fields(ds):
     assert r.input_tokens > 0 and r.total_time_s >= 0
     assert r.policy.method == "csv"
     assert r.node_log[0].name == "q"
+
+
+# ------------------------------------------------- pilot accounting (ISSUE 5)
+def test_replan_reuses_pilot_stats_instead_of_reprobing(ds):
+    """A re-plan resolving a different pilot-cache key (reuse knobs
+    toggled) must serve the CACHED fresh probe, not probe the now
+    memo-warm oracle: a warm re-probe would report pilot_calls=0 and the
+    default tokens_per_call, making the pilot look free and corrupting
+    the cost ordering."""
+    sess = Session()
+    t = sess.table(embeddings=ds.embeddings)
+    q = (t.filter(_oracle(ds), name="q1")
+         & t.filter(_oracle(ds, "RV-Q3"), name="q3"))
+    on = ExecutionPolicy(n_clusters=4)
+    off = on.replace(reuse_memo=False, reuse_stats=False)
+    ex_on = q.explain(on)
+    assert ex_on.pilot_calls > 0
+    ex_off = q.explain(off)   # different cache key, oracle memo now warm
+    assert ex_off.pilot_calls == ex_on.pilot_calls
+    assert ex_off.order == ex_on.order
+    stats = q._fresh_pilots[(on.seed, on.pilot_size, 0)]
+    assert all(ps.pilot_calls > 0 and ps.tokens_per_call != 64.0
+               for ps in stats.values())
+    r = q.collect(off)
+    assert r.pilot_calls == ex_on.pilot_calls

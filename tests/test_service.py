@@ -1,0 +1,409 @@
+"""Concurrent semantic-filter service (ISSUE 5 acceptance criteria).
+
+Hard contracts:
+1. N interleaved ``submit()``s produce masks AND per-query oracle call
+   counts identical to N serial ``collect()``s under fixed seeds — the
+   cross-query batcher merges dispatches, it never perturbs per-query
+   sampling, voting, memo, or flip-RNG streams;
+2. on >= 4 concurrent queries over shared tables, the mean oracle batch
+   size per merged invocation is >= 1.5x the serial per-invocation mean;
+3. two submissions sharing an oracle are conflict-serialized in
+   submission order (the second replays from the session memo exactly as
+   it would serially);
+4. a session saved to disk and reloaded replays previously-collected
+   filter AND join queries at zero oracle calls, bit-identically; after a
+   post-reload ``append()`` only dirty clusters re-vote — matching an
+   unrestarted control bit for bit;
+5. tenant admission: aggregate worst-case reservations against
+   ``ExecutionPolicy.max_oracle_calls`` reject over-budget submissions
+   up front, and settle to actual spend at gather.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.service import (FilterService, SessionStore, TenantBudgetError)
+
+N = 1200
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+@pytest.fixture(scope="module")
+def join_sides():
+    from repro.data import make_dataset
+    dl = make_dataset("imdb_review", n=80, seed=1, n_topics=4)
+    dr = make_dataset("imdb_review", n=60, seed=2, n_topics=4)
+    truth = (dl.topics[:, None] % 2) == (dr.topics[None, :] % 2)
+    return dl, dr, truth
+
+
+def _oracle(ds, q="RV-Q1", flip=0.02, seed=7):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=seed,
+                           token_lens=ds.token_lens)
+
+
+def _blobs(n_per=300, k=4, seed=0):
+    """k well-separated clusters: k-means recovers them exactly, so the
+    dirty-cluster arithmetic is deterministic (same as test_session_reuse)."""
+    rng = np.random.default_rng(seed)
+    centers = np.eye(k, k, dtype=np.float32) * 10.0
+    emb = np.concatenate([
+        centers[i] + rng.normal(0, 0.5, (n_per, k)).astype(np.float32)
+        for i in range(k)])
+    labels = np.concatenate([np.full(n_per, bool(i % 2 == 0))
+                             for i in range(k)])
+    return centers, emb, labels
+
+
+def _mixed_workload(ds, join_sides):
+    """One session + the 5-query mixed workload (4 filters incl. an
+    expression cascade, 1 join), with fresh oracle objects per call."""
+    dl, dr, truth = join_sides
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    tl = sess.table(embeddings=dl.embeddings, name="L")
+    tr = sess.table(embeddings=dr.embeddings, name="R")
+    jo = SyntheticOracle(truth.ravel(), flip_prob=0.0, seed=3)
+    queries = [
+        t.filter(_oracle(ds, "RV-Q1"), name="A"),
+        t.filter(_oracle(ds, "RV-Q3"), name="B"),
+        t.filter(_oracle(ds, "RV-Q1", seed=11), name="C")
+        & t.filter(_oracle(ds, "RV-Q3", seed=12), name="D"),
+        ~t.filter(_oracle(ds, "RV-Q3", seed=13), name="E"),
+        tl.join(tr, jo),
+    ]
+    return sess, queries
+
+
+# ------------------------------------------------- concurrency determinism
+def test_interleaved_submits_match_serial_collects(ds, join_sides):
+    s_serial, qs = _mixed_workload(ds, join_sides)
+    serial = [q.collect() for q in qs]
+    serial_batches = []
+    for q in qs:
+        for o in (q._oracles() if hasattr(q, "_oracles") else [q.oracle]):
+            serial_batches.extend(o.stats.batch_sizes)
+
+    s_conc, qc = _mixed_workload(ds, join_sides)
+    try:
+        with s_conc.scheduler.holding():
+            tickets = [s_conc.submit(q) for q in qc]
+        conc = s_conc.gather(*tickets)
+        for rs, rc in zip(serial, conc):
+            assert rc.n_llm_calls == rs.n_llm_calls
+            assert rc.pilot_calls == rs.pilot_calls
+            if rs.mask is not None:
+                assert (rc.mask == rs.mask).all()
+            else:
+                assert (rc.pair_mask == rs.pair_mask).all()
+        # run-level aggregates agree too (order-independent totals)
+        assert s_conc.stats.n_calls == s_serial.stats.n_calls
+        assert s_conc.stats.input_tokens == s_serial.stats.input_tokens
+
+        # acceptance: >= 4 concurrent queries over shared tables merge into
+        # dispatches >= 1.5x the serial per-invocation mean
+        merge = s_conc.scheduler.stats.merge
+        assert merge.n_invocations > 0
+        ratio = merge.mean_batch_size / np.mean(serial_batches)
+        assert ratio >= 1.5, f"mean merged batch only {ratio:.2f}x serial"
+        assert merge.merge_factor > 1.5
+    finally:
+        s_conc.close()
+
+
+def test_submit_does_not_perturb_later_serial_collect(ds):
+    """The scheduled clone and the serial path share pilot caches and memo
+    identity: submit-then-collect behaves exactly like collect-then-collect
+    (second run replays at zero calls)."""
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    q = t.filter(o, name="A")
+    try:
+        (r1,) = sess.gather(sess.submit(q))
+        r2 = q.collect()   # serial, same query object
+        assert r2.n_llm_calls == 0 and r2.n_replayed == N
+        assert (r2.mask == r1.mask).all()
+    finally:
+        sess.close()
+
+
+def test_conflicting_submissions_serialize_and_replay(ds):
+    """Two submissions over one oracle object never run concurrently: the
+    second defers until the first finishes, then replays its memoized
+    decisions — the exact serial interleaving."""
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    o = _oracle(ds)
+    try:
+        with sess.scheduler.holding():
+            k1 = sess.submit(t.filter(o, name="A"))
+            k2 = sess.submit(t.filter(o, name="A"))
+        r1, r2 = sess.gather(k1, k2)
+        assert sess.scheduler.stats.n_deferred == 1
+        assert r1.n_llm_calls > 0
+        assert r2.n_llm_calls == 0 and r2.n_replayed == N
+        assert (r2.mask == r1.mask).all()
+        assert o.stats.n_calls == r1.n_llm_calls
+    finally:
+        sess.close()
+
+
+def test_failed_query_does_not_wedge_the_scheduler(ds):
+    class Boom(RuntimeError):
+        pass
+
+    class FailingOracle(SyntheticOracle):
+        def _evaluate(self, ids):
+            raise Boom("oracle down")
+
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    bad = FailingOracle(ds.labels["RV-Q1"])
+    good = _oracle(ds)
+    try:
+        with sess.scheduler.holding():
+            kb = sess.submit(t.filter(bad, name="bad"))
+            kg = sess.submit(t.filter(good, name="good"))
+        with pytest.raises(Boom):
+            kb.result()
+        (rg,) = sess.gather(kg)
+        assert rg.n_llm_calls > 0
+        ref = Session(policy=POL).table(
+            embeddings=ds.embeddings).filter(
+                _oracle(ds), name="good").collect()
+        assert (rg.mask == ref.mask).all()
+    finally:
+        sess.close()
+
+
+# -------------------------------------------------------------- persistence
+def _persist_session(ds, join_sides):
+    """Session with registered (durable-named) oracles and tables."""
+    dl, dr, truth = join_sides
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    tl = sess.table(embeddings=dl.embeddings, name="L")
+    tr = sess.table(embeddings=dr.embeddings, name="R")
+    sess.register_oracle("A", _oracle(ds, "RV-Q1"))
+    sess.register_oracle("B", _oracle(ds, "RV-Q3"))
+    sess.register_oracle("J", SyntheticOracle(truth.ravel(), flip_prob=0.0,
+                                              seed=3))
+    return sess, t, tl, tr
+
+
+def test_persistence_roundtrip_zero_call_replay(ds, join_sides, tmp_path):
+    sess, t, tl, tr = _persist_session(ds, join_sides)
+    rA = t.filter("A").collect()
+    rB0 = t.filter("B").collect()
+    rB = (t.filter("A") & t.filter("B")).collect()
+    rJ = tl.join(tr, sess.oracle("J")).collect()
+    store = SessionStore(tmp_path)
+    store.save(sess)
+
+    # "new process": fresh session, fresh oracle objects, same names/data
+    sess2, t2, tl2, tr2 = _persist_session(ds, join_sides)
+    rep = store.load(sess2)
+    assert set(rep.tables) == {"reviews", "L", "R"}
+    assert rep.n_decisions >= 2 and rep.n_joins == 1 and not rep.skipped
+    r2A = t2.filter("A").collect()
+    assert r2A.n_llm_calls == 0 and r2A.n_replayed == N
+    assert (r2A.mask == rA.mask).all()
+    r2B0 = t2.filter("B").collect()
+    assert r2B0.n_llm_calls == 0 and (r2B0.mask == rB0.mask).all()
+    r2B = (t2.filter("A") & t2.filter("B")).collect()
+    assert r2B.n_llm_calls == 0 and (r2B.mask == rB.mask).all()
+    r2J = tl2.join(tr2, sess2.oracle("J")).collect()
+    assert r2J.n_llm_calls == 0
+    assert r2J.n_replayed == r2J.pair_mask.size
+    assert (r2J.pair_mask == rJ.pair_mask).all()
+    # restored sessions spent zero oracle calls end to end
+    assert sess2.stats.n_calls == 0
+
+
+def test_reload_then_append_revotes_only_dirty_clusters(tmp_path):
+    centers, emb, labels = _blobs()
+    add = centers[0] + np.random.default_rng(9).normal(
+        0, 0.5, (40, 4)).astype(np.float32)
+    post_labels = np.concatenate([labels, np.full(40, True)])
+
+    def build():
+        s = Session(policy=POL)
+        t = s.table(embeddings=emb, name="blobs")
+        # oracle over the post-append labels (ids must cover the grown
+        # range; see docs/caching.md)
+        s.register_oracle("P", SyntheticOracle(post_labels, flip_prob=0.0,
+                                               seed=7))
+        return s, t
+
+    s1, t1 = build()
+    r1 = t1.filter("P").collect()
+    SessionStore(tmp_path).save(s1)
+
+    s2, t2 = build()
+    rep = SessionStore(tmp_path).load(s2)
+    assert rep.tables == ["blobs"] and not rep.skipped
+    t2.append(embeddings=add)
+    r2 = t2.filter("P").collect()
+    # exactly the 3 clean clusters replay; only cluster 0 (+ appendees)
+    # re-votes
+    assert r2.n_replayed == 900
+    assert 0 < r2.n_llm_calls < r1.n_llm_calls
+    assert (r2.mask[: len(labels)] == r1.mask).all()
+
+    # bit-identical to the unrestarted control
+    s3, t3 = build()
+    t3.filter("P").collect()
+    t3.append(embeddings=add)
+    rc = t3.filter("P").collect()
+    assert rc.n_llm_calls == r2.n_llm_calls
+    assert (rc.mask == r2.mask).all()
+
+
+def test_store_invalidates_on_changed_table(ds, tmp_path):
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    sess.register_oracle("A", _oracle(ds))
+    t.filter("A").collect()
+    SessionStore(tmp_path).save(sess)
+
+    other = np.asarray(ds.embeddings).copy()
+    other[0] += 1.0  # different content under the same name
+    sess2 = Session(policy=POL)
+    sess2.table(embeddings=other, name="reviews")
+    sess2.register_oracle("A", _oracle(ds))
+    rep = SessionStore(tmp_path).load(sess2)
+    assert rep.tables == [] and rep.n_decisions == 0
+    assert any("content changed" in s for s in rep.skipped)
+    with pytest.raises(ValueError, match="content changed"):
+        SessionStore(tmp_path).load(sess2, strict=True)
+
+
+def test_store_invalidates_on_reencoded_texts(ds, tmp_path):
+    """Same texts embedded by a DIFFERENT encoder are different data: the
+    fingerprint hashes both components, so restored precluster state can
+    never silently mismatch the rebuilt embedding space."""
+    texts = [f"review number {i}" for i in range(N)]
+    sess = Session(policy=POL)
+    sess.table(texts=texts, embeddings=ds.embeddings, name="reviews")
+    sess.register_oracle("A", _oracle(ds))
+    sess["reviews"].filter("A").collect()
+    SessionStore(tmp_path).save(sess)
+
+    sess2 = Session(policy=POL)
+    sess2.table(texts=texts, embeddings=ds.embeddings * 0.5, name="reviews")
+    sess2.register_oracle("A", _oracle(ds))
+    rep = SessionStore(tmp_path).load(sess2)
+    assert rep.tables == [] and rep.n_decisions == 0
+    assert any("content changed" in s for s in rep.skipped)
+
+
+def test_result_under_hold_raises_instead_of_deadlocking(ds):
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    try:
+        with sess.scheduler.holding():
+            tk = sess.submit(t.filter(_oracle(ds), name="A"))
+            with pytest.raises(RuntimeError, match="holding"):
+                tk.result(timeout=5)
+            with pytest.raises(RuntimeError, match="holding"):
+                sess.gather(tk)   # gather must not destroy an active hold
+        (r,) = sess.gather(tk)
+        assert r.n_llm_calls > 0
+    finally:
+        sess.close()
+
+
+def test_store_skips_unregistered_oracles(ds, tmp_path):
+    """Decisions of inline (never-registered) oracles have no durable name:
+    the save drops them with a note instead of corrupting the store."""
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    t.filter(_oracle(ds), name="anon").collect()
+    store = SessionStore(tmp_path)
+    store.save(sess)
+    sess2 = Session(policy=POL)
+    sess2.table(embeddings=ds.embeddings, name="reviews")
+    rep = store.load(sess2)
+    assert rep.n_decisions == 0 and rep.tables == ["reviews"]
+
+
+# ---------------------------------------------------------------- admission
+def test_tenant_admission_and_settlement(ds):
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    svc = FilterService(sess)
+    svc.register_tenant("small", POL.replace(max_oracle_calls=100))
+    svc.register_tenant("big", POL.replace(max_oracle_calls=50_000))
+    try:
+        with pytest.raises(TenantBudgetError):
+            svc.submit("small", t.filter(_oracle(ds), name="S"))
+        assert svc.tenant("small").n_rejected == 1
+
+        o = _oracle(ds)
+        tk = svc.submit("big", t.filter(o, name="A"))
+        (r,) = svc.gather(tk)
+        acct = svc.tenant("big")
+        assert acct.spent == r.n_llm_calls > 0
+        assert acct.reserved == 0.0
+        # a replayable resubmission reserves ~0: warm queries fit budgets
+        # their cold run would blow
+        tk2 = svc.submit("big", t.filter(o, name="A"),
+                         policy=POL.replace(max_oracle_calls=50))
+        (r2,) = svc.gather(tk2)
+        assert r2.n_llm_calls == 0 and acct.spent == r.n_llm_calls
+    finally:
+        svc.close()
+
+
+def test_settlement_rides_on_completion_not_gather(ds):
+    """A client consuming its ticket via result() (never gather) must
+    still free the tenant's reservation — and a failed ticket consumed
+    that way must not resurface in a later no-arg gather."""
+    class Boom(RuntimeError):
+        pass
+
+    class FailingOracle(SyntheticOracle):
+        def _evaluate(self, ids):
+            raise Boom("oracle down")
+
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    svc = FilterService(sess)
+    svc.register_tenant("t", POL.replace(max_oracle_calls=2000))
+    try:
+        bad = svc.submit("t", t.filter(FailingOracle(ds.labels["RV-Q1"]),
+                                       name="bad"))
+        with pytest.raises(Boom):
+            bad.result(timeout=60)
+        acct = svc.tenant("t")
+        deadline = 60.0
+        while acct.reserved and deadline > 0:   # done-callback settles
+            time.sleep(0.01)
+            deadline -= 0.01
+        assert acct.reserved == 0.0 and acct.spent == 0
+        # the budget is genuinely free again, and the consumed failure
+        # does not re-raise out of an unrelated gather
+        ok = svc.submit("t", t.filter(_oracle(ds), name="ok"))
+        (r,) = svc.gather()
+        assert r is not None and r.n_llm_calls > 0
+        assert ok.done()
+    finally:
+        svc.close()
+
+
+def test_unknown_tenant_rejected(ds):
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings)
+    svc = FilterService(sess)
+    with pytest.raises(KeyError, match="unknown tenant"):
+        svc.submit("ghost", t.filter(_oracle(ds), name="A"))
