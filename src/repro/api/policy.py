@@ -42,7 +42,10 @@ class ExecutionPolicy:
         linear baselines "reference" / "lotus" / "bargain" — all five route
         through the same ``Query.collect()``.
     executor / pipeline_depth: round-vectorized vs. sequential CSV driver,
-        and the number of overlapped oracle waves per round.
+        and the number of overlapped oracle waves per round.  The service
+        scheduler generalizes the same depth to barrier ticks: each tick
+        splits into up to ``pipeline_depth`` packed waves so engine prefill
+        of wave k+1 overlaps host-side voting on wave k (docs/serving.md).
     epsilon: user error tolerance; when set, the sampling rate xi is derived
         via the paper's Thm 3.3/3.6 instead of taken from ``xi``.
     max_oracle_calls: advisory pre-flight budget; ``collect()`` raises

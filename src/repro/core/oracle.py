@@ -96,7 +96,13 @@ class BaseOracle:
     def _tokens_of(self, ids: np.ndarray) -> int:
         return int(len(ids)) * 64  # overridden where real text exists
 
-    def __call__(self, ids) -> np.ndarray:
+    def _memo_split(self, ids):
+        """Resolve memo hits; return (out, missing, missing_pos).
+
+        ``out`` has hits filled in (misses still False); ``missing`` are the
+        ids needing a model evaluation, ``missing_pos`` their positions.
+        Counts cache hits exactly as ``__call__`` always has.
+        """
         ids = np.asarray(ids, dtype=np.int64)
         out = np.zeros(len(ids), dtype=bool)
         missing, missing_pos = [], []
@@ -107,16 +113,25 @@ class BaseOracle:
             else:
                 missing.append(int(i))
                 missing_pos.append(pos)
+        return out, missing, missing_pos
+
+    def _memo_commit(self, out, missing, missing_pos, labels) -> np.ndarray:
+        """Fold evaluated labels back: memo writes + stats, as ``__call__``."""
+        mids = np.asarray(missing, dtype=np.int64)
+        for i, lab in zip(missing, labels):
+            self._memo[i] = bool(lab)
+        out[missing_pos] = labels
+        self.stats.n_calls += len(missing)
+        self.stats.input_tokens += self._tokens_of(mids)
+        self.stats.output_tokens += len(missing)  # 1 decision token each
+        self.stats.batch_sizes.append(len(missing))
+        return out
+
+    def __call__(self, ids) -> np.ndarray:
+        out, missing, missing_pos = self._memo_split(ids)
         if missing:
-            mids = np.asarray(missing, dtype=np.int64)
-            labels = self._evaluate(mids)
-            for i, lab in zip(missing, labels):
-                self._memo[i] = bool(lab)
-            out[missing_pos] = labels
-            self.stats.n_calls += len(missing)
-            self.stats.input_tokens += self._tokens_of(mids)
-            self.stats.output_tokens += len(missing)  # 1 decision token each
-            self.stats.batch_sizes.append(len(missing))
+            labels = self._evaluate(np.asarray(missing, dtype=np.int64))
+            out = self._memo_commit(out, missing, missing_pos, labels)
         return out
 
     # --- persistence (fault tolerance / §3.1 update cache) ---
@@ -229,12 +244,115 @@ class ModelOracle(BaseOracle):
         return self._tok_cache[i]
 
     def _evaluate(self, ids):
-        prompts = [self._prompt_ids(int(i)) for i in ids]
-        logits = self.engine.first_token_logits(prompts)  # (B, V)
-        return np.asarray(logits[:, self.yes_id] > logits[:, self.no_id])
+        # narrow fast path: only the (yes, no) logit pair leaves the
+        # device.  Per-prompt (B, 2) token ids — the same einsum shape the
+        # packed cross-oracle wave uses, so packed and per-oracle dispatch
+        # produce bit-identical logits.
+        pair = self.engine.first_token_logits(
+            self.pack_prompts(ids), token_ids=self.pack_token_ids(len(ids)))
+        return self.pack_labels(pair)
 
     def _tokens_of(self, ids):
         return int(sum(len(self._prompt_ids(int(i))) for i in ids))
+
+    # --- cross-oracle packing protocol (service scheduler) ---
+    # Oracles sharing ``pack_engine`` can have their prompts evaluated in
+    # one engine wave: the scheduler concatenates ``pack_prompts`` outputs,
+    # calls ``pack_engine.first_token_logits(prompts, token_ids=(B, 2))``
+    # once, and hands each oracle its slice back through ``pack_labels``.
+    @property
+    def pack_engine(self):
+        return self.engine
+
+    def pack_prompts(self, ids):
+        return [self._prompt_ids(int(i)) for i in ids]
+
+    def pack_token_ids(self, n: int) -> np.ndarray:
+        return np.tile(np.asarray([self.yes_id, self.no_id], np.int32),
+                       (n, 1))
+
+    def pack_labels(self, pair_logits) -> np.ndarray:
+        return np.asarray(pair_logits[:, 0] > pair_logits[:, 1])
+
+
+# --------------------------------------------------------------------------
+# Cross-oracle packed evaluation: one engine wave per (tick, length-bucket)
+# across every oracle sharing an engine — the service scheduler's fused
+# serving path.  Per-oracle memo/stats accounting is byte-identical to
+# calling each oracle directly (same _memo_split/_memo_commit helpers).
+# --------------------------------------------------------------------------
+def evaluate_packed(requests, pack: bool = True):
+    """Evaluate ``[(oracle, ids), ...]`` with cross-oracle prompt packing.
+
+    Oracles exposing the pack protocol (``pack_engine``/``pack_prompts``/
+    ``pack_labels`` — ``ModelOracle``) and sharing an engine contribute
+    their memo-missing prompts to ONE ``first_token_logits`` wave; the
+    engine's bucket batcher length-buckets them across oracles and results
+    scatter back per ``(oracle, ids)`` slice.  Other oracles evaluate
+    normally, in request order.  A request whose oracle appears more than
+    once in the wave defers its later occurrences to a follow-up pass, so
+    memoization sees the same order a serial drain would produce.
+
+    Returns ``(outcomes, info)``: ``outcomes[i]`` is the label array or the
+    exception that request hit; ``info`` holds ``tokens`` (oracle input +
+    decision tokens spent) and ``truncated`` (prompts the engine batcher
+    left-truncated during this call).
+    """
+    outcomes: list = [None] * len(requests)
+    info = {"tokens": 0, "truncated": 0}
+    remaining = list(enumerate(requests))
+    while remaining:
+        seen_oracles: set = set()
+        next_pass = []
+        packable: dict = {}   # id(engine) -> [(idx, oracle, split), ...]
+        engines: dict = {}
+        for idx, (oracle, ids) in remaining:
+            if id(oracle) in seen_oracles:
+                next_pass.append((idx, (oracle, ids)))
+                continue
+            seen_oracles.add(id(oracle))
+            engine = getattr(oracle, "pack_engine", None) if pack else None
+            if engine is None:
+                try:
+                    before = oracle.stats.clone()
+                    outcomes[idx] = oracle(np.asarray(ids))
+                    d = oracle.stats.delta(before)
+                    info["tokens"] += d.input_tokens + d.output_tokens
+                except BaseException as e:
+                    outcomes[idx] = e
+                continue
+            split = oracle._memo_split(ids)
+            engines[id(engine)] = engine
+            packable.setdefault(id(engine), []).append((idx, oracle, split))
+        for ekey, group in packable.items():
+            engine = engines[ekey]
+            prompts, tok_rows = [], []
+            for _, oracle, (_, missing, _) in group:
+                prompts.extend(oracle.pack_prompts(missing))
+                tok_rows.append(oracle.pack_token_ids(len(missing)))
+            if prompts:
+                trunc0 = engine.batcher.stats["truncated_prompts"]
+                try:
+                    pair = engine.first_token_logits(
+                        prompts, token_ids=np.concatenate(tok_rows))
+                except BaseException as e:
+                    for idx, _, _ in group:
+                        outcomes[idx] = e
+                    continue
+                info["truncated"] += (
+                    engine.batcher.stats["truncated_prompts"] - trunc0)
+            k = 0
+            for idx, oracle, (out, missing, missing_pos) in group:
+                if missing:
+                    labels = oracle.pack_labels(pair[k:k + len(missing)])
+                    k += len(missing)
+                    out = oracle._memo_commit(out, missing, missing_pos,
+                                              labels)
+                    info["tokens"] += (oracle._tokens_of(
+                        np.asarray(missing, np.int64)) + len(missing))
+                outcomes[idx] = out
+        remaining = next_pass
+    return outcomes, info
 
 
 # --------------------------------------------------------------------------
@@ -282,6 +400,12 @@ class AsyncOracleDispatcher:
             raise ValueError("dispatcher built without a default oracle; "
                              "pass oracle= to submit()")
         return self._pool.submit(target, np.asarray(ids))
+
+    def submit_call(self, fn, *args) -> Future:
+        """Queue an arbitrary callable on the same FIFO lane — the service
+        scheduler submits one packed *wave* per call so prefill of wave
+        k+1 can overlap host-side voting on wave k's parked tasks."""
+        return self._pool.submit(fn, *args)
 
     def close(self):
         self._pool.shutdown(wait=True)

@@ -1,4 +1,10 @@
-"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere.
+
+``impl`` selects explicitly: "auto" (Pallas on TPU, ref otherwise — the
+historical behavior), "pallas" (always the kernel; interpret mode is
+enabled automatically off-TPU so the same code path is testable on CPU),
+or "ref" (always the jnp oracle).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,7 +13,12 @@ from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
-def decode_attention(q, k, v, lengths):
-    if jax.default_backend() == "tpu":
-        return decode_attention_pallas(q, k, v, lengths)
-    return decode_attention_ref(q, k, v, lengths)
+def decode_attention(q, k, v, lengths, *, impl: str = "auto",
+                     block_l: int = 256, interpret=None):
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu):
+        return decode_attention_ref(q, k, v, lengths)
+    if interpret is None:
+        interpret = not on_tpu
+    return decode_attention_pallas(q, k, v, lengths, block_l=block_l,
+                                   interpret=interpret)

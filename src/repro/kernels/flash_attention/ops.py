@@ -1,4 +1,10 @@
-"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere."""
+"""jit'd wrapper: Pallas on TPU, jnp reference elsewhere.
+
+``impl`` selects explicitly: "auto" (Pallas on TPU, ref otherwise — the
+historical behavior), "pallas" (always the kernel; interpret mode is
+enabled automatically off-TPU so the same code path is testable on CPU),
+or "ref" (always the jnp oracle).
+"""
 from __future__ import annotations
 
 import jax
@@ -7,7 +13,14 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-def flash_attention(q, k, v, *, causal: bool = True, window=None):
-    if jax.default_backend() == "tpu":
-        return flash_attention_pallas(q, k, v, causal=causal, window=window)
-    return flash_attention_ref(q, k, v, causal=causal, window=window)
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    impl: str = "auto", block_q: int = 128,
+                    block_k: int = 128, interpret=None):
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "ref" or (impl == "auto" and not on_tpu):
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    if interpret is None:
+        interpret = not on_tpu
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

@@ -39,13 +39,15 @@ SERVICE_PREDICATES = [
 ]
 
 
-def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str):
+def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
+                     pipeline_depth: int = 1):
     """K predicates through the concurrent service over one engine."""
     from repro.api import ExecutionPolicy, Session
     from repro.service import FilterService
 
     preds = (SERVICE_PREDICATES * ((k - 1) // len(SERVICE_PREDICATES) + 1))[:k]
-    sess = Session(policy=ExecutionPolicy(n_clusters=4, min_sample=25))
+    sess = Session(policy=ExecutionPolicy(n_clusters=4, min_sample=25,
+                                          pipeline_depth=pipeline_depth))
     table = sess.table(embeddings=embeddings, name="reviews")
     for i, text in enumerate(preds):
         sess.register_oracle(f"p{i}", ModelOracle(engine, tok, text,
@@ -65,6 +67,12 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str):
     print(f"[serve] merged dispatches: {merge.n_invocations}, mean "
           f"{merge.mean_batch_size:.0f} ids/invocation "
           f"(merge factor {merge.merge_factor:.1f}); engine={engine.stats}")
+    print(f"[serve] per-tick: {merge.mean_wall_s * 1e3:.1f} ms mean "
+          f"({merge.last_wall_s * 1e3:.1f} ms last), "
+          f"{merge.tokens_per_s:.0f} oracle tokens/s; "
+          f"engine mean batch {engine.mean_batch_size:.1f}, "
+          f"bucket fill {engine.batcher.fill_ratio:.2f}, "
+          f"truncated prompts {merge.n_truncated}")
     service.checkpoint()
     print(f"[serve] session checkpointed to {state_dir} — rerun to replay "
           "at 0 LLM calls")
@@ -85,11 +93,23 @@ def main():
                          "restartable session store)")
     ap.add_argument("--state-dir", default="/tmp/repro_serve_state",
                     help="SessionStore directory for --service mode")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "plain", "chunked", "tri", "flash",
+                             "flash-ref"],
+                    help="override the model's attention path; 'flash' "
+                         "runs the Pallas kernels (interpret mode off-TPU)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="service tick waves: prefill of wave k+1 "
+                         "overlaps voting on wave k (--service mode)")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="engine device batch cap per bucket")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.attn_impl:
+        cfg = cfg.replace(attn_impl=args.attn_impl)
     params = lm.init_params(cfg, jax.random.key(0))
-    engine = ServingEngine(cfg, params, max_batch=8)
+    engine = ServingEngine(cfg, params, max_batch=args.max_batch)
     tok = HashTokenizer(cfg.vocab_size)
 
     ds = make_dataset("imdb_review", n=args.n, seed=0)
@@ -98,7 +118,7 @@ def main():
 
     if args.service > 0:
         serve_concurrent(engine, tok, ds, embeddings, args.service,
-                         args.state_dir)
+                         args.state_dir, pipeline_depth=args.pipeline_depth)
         return
 
     oracle = ModelOracle(engine, tok, args.predicate, ds.texts)

@@ -65,7 +65,9 @@ class ModelConfig:
     mlp_type: str = "swiglu"  # "swiglu" | "gelu"
     moe_chunk: int = 8192  # token-chunk for MoE dispatch (0 = off)
     # implementation switches (perf levers; see EXPERIMENTS.md §Perf)
-    attn_impl: str = "auto"  # "plain" | "chunked" | "auto"
+    # "plain" | "chunked" | "auto" | "tri" | "flash" (Pallas kernels,
+    # interpret mode off-TPU) | "flash-ref" (their jnp oracles)
+    attn_impl: str = "auto"
     attn_chunk_q: int = 1024
     attn_chunk_kv: int = 1024
     swa_banded: bool = True  # skip KV chunks fully outside a sliding window

@@ -304,14 +304,49 @@ def attention_chunked(cfg: ModelConfig, p, x, *, causal: bool, window=None,
     return out @ p["wo"]
 
 
+def attention_flash(cfg: ModelConfig, p, x, *, causal=True, window=None,
+                    positions=None):
+    """Pallas flash-attention kernel on the prefill/forward hot path.
+
+    ``attn_impl="flash"`` runs ``repro.kernels.flash_attention`` (interpret
+    mode off-TPU, so the serving path is testable on CPU);
+    ``attn_impl="flash-ref"`` runs its jnp oracle.  Mask positions are
+    sequence-local 0..S-1 (same assumption as the chunked tri/rect
+    schedules); ``positions`` feeds RoPE only.
+    """
+    from repro.kernels.flash_attention.ops import flash_attention
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(cfg, p, x)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.pos_type == "rope":
+        q = apply_rope(q.reshape(B, S, -1, hd), positions, cfg.rope_theta).reshape(q.shape)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    qh = q.reshape(B, S, -1, hd).transpose(0, 2, 1, 3)   # (B, H, S, hd)
+    kh = k.transpose(0, 2, 1, 3)                         # (B, KV, S, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    impl = "ref" if cfg.attn_impl == "flash-ref" else "pallas"
+    out = flash_attention(qh, kh, vh, causal=causal, window=window,
+                          impl=impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)    # (B, S, H*hd)
+    return out @ p["wo"]
+
+
 def attention_apply(cfg: ModelConfig, p, x, *, causal=True, window=None,
                     positions=None, kv_x=None):
-    """Dispatch plain vs chunked by config / sequence length."""
+    """Dispatch plain vs chunked vs Pallas-flash by config / seq length."""
     S = x.shape[1]
     impl = cfg.attn_impl
     if kv_x is not None or not causal:
         return attention_plain(cfg, p, x, causal=causal, window=window,
                                positions=positions, kv_x=kv_x)
+    if impl in ("flash", "flash-ref"):
+        if S % min(128, S) == 0:  # kernel block divisibility
+            return attention_flash(cfg, p, x, causal=causal, window=window,
+                                   positions=positions)
+        return attention_plain(cfg, p, x, causal=causal, window=window,
+                               positions=positions)
     if impl == "plain" or (impl == "auto" and S <= 4096 and window is None):
         return attention_plain(cfg, p, x, causal=causal, window=window,
                                positions=positions)
@@ -356,6 +391,19 @@ def attention_decode(cfg: ModelConfig, p, x1, cache, pos, *, window=None,
     bidx = jnp.arange(B)
     k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
     v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    if cfg.attn_impl in ("flash", "flash-ref") and window is None:
+        # flash-decoding kernel: global layers keep a contiguous prefix
+        # cache (slot s = position s), exactly the kernel's lengths
+        # semantics.  Windowed ring buffers stay on the jnp path below.
+        from repro.kernels.decode_attention.ops import decode_attention
+        qd = q.reshape(B, -1, hd)                # (B, H, hd)
+        kd = k_cache.transpose(0, 2, 1, 3)       # (B, KV, L, hd)
+        vd = v_cache.transpose(0, 2, 1, 3)
+        impl = "ref" if cfg.attn_impl == "flash-ref" else "pallas"
+        out = decode_attention(qd, kd, vd, pos + 1, impl=impl)
+        out = out.reshape(B, 1, -1) @ p["wo"]
+        return out, {"k": k_cache, "v": v_cache}
 
     # validity: which cache slots hold tokens visible to this query
     slot_ids = jnp.arange(L)[None, :]  # (1, L)

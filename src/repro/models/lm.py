@@ -254,6 +254,27 @@ def forward_hidden(cfg: ModelConfig, params, tokens, prefix_embeds=None,
     return _run_stack(cfg, params["blocks"], h, positions, enc_out)
 
 
+def first_logits_select(cfg: ModelConfig, params, tokens, lens, token_ids):
+    """Last-position logits for selected vocab ids only -> (B, T).
+
+    The serving fast path for yes/no oracles: same hidden states, same
+    final norm, and the same per-row dot products as ``forward`` + a
+    last-position gather — only the (B, padded_vocab) float32
+    materialization is skipped.  ``token_ids`` is (T,) shared across the
+    batch or (B, T) per prompt; ``lens`` (B,) true prompt lengths.
+    """
+    h, _ = forward_hidden(cfg, params, tokens)
+    hl = h[jnp.arange(h.shape[0]), lens - 1]           # (B, D)
+    hl = L.apply_norm(cfg, params["final_norm"], hl)
+    table = params["lm_head"]["w"] if not cfg.tie_embeddings else params["embed"]["table"]
+    rows = table[token_ids]                            # (T, D) or (B, T, D)
+    if rows.ndim == 3:
+        return jnp.einsum("bd,btd->bt", hl, rows,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bd,td->bt", hl, rows,
+                      preferred_element_type=jnp.float32)
+
+
 def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None,
             enc_frames=None):
     """Full-sequence forward -> (logits (B,S,Vp), aux).

@@ -40,6 +40,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
+import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional
@@ -48,7 +49,7 @@ import numpy as np
 
 from repro.api.memo import oracle_identity
 from repro.api.query import FilterQuery, JoinQuery
-from repro.core.oracle import AsyncOracleDispatcher
+from repro.core.oracle import AsyncOracleDispatcher, evaluate_packed
 from repro.plan.expr import And, Expr, Not, Or, Pred
 from repro.serving.batcher import DispatchMergeStats
 
@@ -186,16 +187,6 @@ def _map_leaves(expr: Expr, fn) -> Expr:
     raise TypeError(f"unknown Expr node {type(expr).__name__}")
 
 
-def _chain(src: Future, dst: Future) -> None:
-    def _done(f: Future):
-        e = f.exception()
-        if e is not None:
-            dst.set_exception(e)
-        else:
-            dst.set_result(f.result())
-    src.add_done_callback(_done)
-
-
 class QueryScheduler:
     """Barrier-tick scheduler over one Session (see module docstring).
 
@@ -207,9 +198,22 @@ class QueryScheduler:
         results = sess.gather(*tickets)
     """
 
-    def __init__(self, session):
+    def __init__(self, session, pipeline_depth: Optional[int] = None,
+                 pack: bool = True):
         self.session = session
         self.stats = ServiceStats()
+        # tick-level pipelining: CSVConfig.pipeline_depth generalized to
+        # the service layer.  Each barrier tick splits into up to this many
+        # task-ordered waves queued back-to-back on the FIFO lane, so the
+        # engine prefill of wave k+1 overlaps host-side voting/partitioning
+        # by the task threads wave k just unparked.  Depth 1 == one merged
+        # dispatch per tick (the PR-5 behavior).
+        if pipeline_depth is None:
+            pipeline_depth = max(1, getattr(getattr(session, "policy", None),
+                                            "pipeline_depth", 1))
+        self.pipeline_depth = int(pipeline_depth)
+        # pack=False keeps per-oracle engine dispatch (benchmark control)
+        self.pack = pack
         self._cv = threading.Condition()
         self._running: List[_Task] = []
         self._deferred: List[_Task] = []
@@ -365,12 +369,38 @@ class QueryScheduler:
                 for t in sorted(self._running, key=lambda t: t.index):
                     while t.pending:
                         batch.append(t.pending.popleft())
-            # evaluate OUTSIDE the lock: one merged dispatch, drained
-            # through the single FIFO lane in (task, submission) order
-            self.stats.merge.record([len(r.ids) for r in batch])
-            for r in batch:
-                _chain(self._dispatcher.submit(r.ids, oracle=r.oracle),
-                       r.future)
+            # evaluate OUTSIDE the lock: split the tick into up to
+            # pipeline_depth task-ordered waves, each ONE packed dispatch
+            # on the FIFO lane — oracles sharing an engine contribute all
+            # their prompts to a single bucketed first_token_logits call
+            # per wave, and wave k+1's prefill overlaps the voting wave k
+            # unparked (see _run_wave)
+            n_waves = max(1, min(self.pipeline_depth, len(batch)))
+            bounds = np.linspace(0, len(batch), n_waves + 1).astype(int)
+            for w in range(n_waves):
+                wave = batch[bounds[w]:bounds[w + 1]]
+                if wave:
+                    self._dispatcher.submit_call(self._run_wave, wave)
+
+    def _run_wave(self, wave: List[_OracleRequest]) -> None:
+        """Evaluate one packed wave on the dispatcher lane and unpark its
+        requesters.  Runs strictly FIFO relative to other waves, so
+        per-oracle evaluation order stays exactly submission order."""
+        t0 = time.perf_counter()
+        try:
+            outcomes, info = evaluate_packed(
+                [(r.oracle, r.ids) for r in wave], pack=self.pack)
+        except BaseException as e:  # defensive: never strand a waiter
+            outcomes, info = [e] * len(wave), {"tokens": 0, "truncated": 0}
+        self.stats.merge.record([len(r.ids) for r in wave],
+                                wall_s=time.perf_counter() - t0,
+                                tokens=info["tokens"],
+                                truncated=info["truncated"])
+        for r, out in zip(wave, outcomes):
+            if isinstance(out, BaseException):
+                r.future.set_exception(out)
+            else:
+                r.future.set_result(out)
 
     # ------------------------------------------------------------ control
     @contextlib.contextmanager

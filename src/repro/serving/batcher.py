@@ -35,13 +35,22 @@ class DispatchMergeStats:
         self.n_requests = 0
         self.total_ids = 0
         self.last_invocation = 0   # merged ids in the most recent dispatch
+        self.total_wall_s = 0.0    # evaluation wall-clock across dispatches
+        self.last_wall_s = 0.0
+        self.total_tokens = 0      # oracle tokens (input + decision) spent
+        self.n_truncated = 0       # prompts left-truncated by the batcher
 
-    def record(self, sizes: Iterable[int]) -> None:
+    def record(self, sizes: Iterable[int], wall_s: float = 0.0,
+               tokens: int = 0, truncated: int = 0) -> None:
         sizes = [int(s) for s in sizes]
         self.n_invocations += 1
         self.n_requests += len(sizes)
         self.last_invocation = sum(sizes)
         self.total_ids += self.last_invocation
+        self.last_wall_s = float(wall_s)
+        self.total_wall_s += float(wall_s)
+        self.total_tokens += int(tokens)
+        self.n_truncated += int(truncated)
 
     @property
     def mean_batch_size(self) -> float:
@@ -57,6 +66,20 @@ class DispatchMergeStats:
             return 0.0
         return self.n_requests / self.n_invocations
 
+    @property
+    def mean_wall_s(self) -> float:
+        """Mean evaluation wall-clock per dispatch (tick wave)."""
+        if not self.n_invocations:
+            return 0.0
+        return self.total_wall_s / self.n_invocations
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Oracle token throughput over the recorded evaluation time."""
+        if self.total_wall_s <= 0:
+            return 0.0
+        return self.total_tokens / self.total_wall_s
+
 
 class BucketBatcher:
     def __init__(self, max_batch: int = 32, pad_id: int = 0,
@@ -70,7 +93,11 @@ class BucketBatcher:
         # cross-cluster batches arrive max_batch-sized instead of per-cluster
         # trickles; benchmarks and the round planner read these numbers.
         self.stats = {"plans": 0, "prompts": 0, "batches": 0,
-                      "padded_tokens": 0, "real_tokens": 0}
+                      "padded_tokens": 0, "real_tokens": 0,
+                      # overlong prompts silently lose their head (left
+                      # truncation keeps the answer-bearing tail); count
+                      # both events and tokens so the loss is visible
+                      "truncated_prompts": 0, "truncated_tokens": 0}
 
     @property
     def mean_batch_size(self) -> float:
@@ -96,6 +123,9 @@ class BucketBatcher:
             lens = np.zeros(len(idx), np.int32)
             for r, k in enumerate(idx):
                 p = prompts[k][-L:]  # truncate overlong from the left
+                if len(prompts[k]) > L:
+                    self.stats["truncated_prompts"] += 1
+                    self.stats["truncated_tokens"] += len(prompts[k]) - L
                 toks[r, :len(p)] = p
                 lens[r] = len(p)
             batches.append((idx, toks, lens))

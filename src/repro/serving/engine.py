@@ -31,7 +31,10 @@ class ServingEngine:
         # mean uses O(1) cumulative counters so a long-running server never
         # grows without bound
         self.stats = {"prefill_tokens": 0, "decode_tokens": 0, "batches": 0,
-                      "batched_prompts": 0, "batch_sizes": []}
+                      "batched_prompts": 0, "batch_sizes": [],
+                      # mirrored from the batcher so silent prompt-head
+                      # loss is visible where serving stats are read
+                      "truncated_prompts": 0, "truncated_tokens": 0}
     _BATCH_SIZE_WINDOW = 1024
 
     @property
@@ -58,19 +61,52 @@ class ServingEngine:
             self._prefill_cache[key] = jax.jit(f)
         return self._prefill_cache[key]
 
-    def first_token_logits(self, prompts: Sequence[List[int]]) -> np.ndarray:
-        """Logits at each prompt's last position. (n_prompts, padded_vocab)."""
-        out = np.zeros((len(prompts), self.cfg.padded_vocab), np.float32)
+    def _select_fn(self, L: int, per_prompt: bool):
+        key = (L, "select", per_prompt)
+        if key not in self._prefill_cache:
+            cfg = self.cfg
+
+            def f(params, tokens, lens, token_ids):
+                return lm.first_logits_select(cfg, params, tokens, lens,
+                                              token_ids)
+
+            self._prefill_cache[key] = jax.jit(f)
+        return self._prefill_cache[key]
+
+    def first_token_logits(self, prompts: Sequence[List[int]],
+                           token_ids=None) -> np.ndarray:
+        """Logits at each prompt's last position.
+
+        Without ``token_ids``: the full (n_prompts, padded_vocab) float32
+        matrix.  With ``token_ids`` — (T,) shared across prompts or
+        (n_prompts, T) per prompt — only those T logits per prompt come
+        back to the host ((n_prompts, T)); the yes/no oracle fast path
+        that never materializes the vocab axis.
+        """
+        if token_ids is not None:
+            token_ids = np.asarray(token_ids, np.int32)
+        n_tok = (self.cfg.padded_vocab if token_ids is None
+                 else token_ids.shape[-1])
+        out = np.zeros((len(prompts), n_tok), np.float32)
         for idx, toks, lens in self.batcher.plan(prompts):
-            logits = self._prefill_fn(toks.shape[1], False)(
-                self.params, jnp.asarray(toks))
-            last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+            if token_ids is None:
+                logits = self._prefill_fn(toks.shape[1], False)(
+                    self.params, jnp.asarray(toks))
+                last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+            else:
+                tids = token_ids if token_ids.ndim == 1 else token_ids[idx]
+                last = np.asarray(self._select_fn(
+                    toks.shape[1], token_ids.ndim == 2)(
+                        self.params, jnp.asarray(toks), jnp.asarray(lens),
+                        jnp.asarray(tids)))
             out[idx] = last
             self.stats["prefill_tokens"] += int(lens.sum())
             self.stats["batches"] += 1
             self.stats["batched_prompts"] += int(len(idx))
             self.stats["batch_sizes"].append(int(len(idx)))
             del self.stats["batch_sizes"][:-self._BATCH_SIZE_WINDOW]
+        for k in ("truncated_prompts", "truncated_tokens"):
+            self.stats[k] = self.batcher.stats[k]
         return out
 
     # --------------------------------------------------------------- decode
@@ -102,6 +138,8 @@ class ServingEngine:
                 cur = jnp.asarray(self._sample(np.asarray(logits_d),
                                                temperature, sub))
                 self.stats["decode_tokens"] += len(idx)
+        for k in ("truncated_prompts", "truncated_tokens"):
+            self.stats[k] = self.batcher.stats[k]
         return results
 
     @staticmethod
