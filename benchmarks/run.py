@@ -56,12 +56,15 @@ def main() -> None:
     small = not args.full
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
-        quick_suites = {"fig4", "service"}
+        # api_overhead rides along for its internal contracts (traced vs
+        # untraced bit-identity + <5% tracer overhead); it contributes no
+        # JSON cases — wall-clock is not a deterministic gate signal
+        quick_suites = {"fig4", "service", "api_overhead"}
         only = quick_suites if only is None else (only & quick_suites)
         if not only:
             # an empty set is falsy and would disable filtering entirely
-            ap.error("--quick runs only the fig4/service suites; the given "
-                     "--only list excludes both")
+            ap.error("--quick runs only the fig4/service/api_overhead "
+                     "suites; the given --only list excludes all of them")
 
     from benchmarks import (bench_fig2_distance, bench_fig4_efficiency,
                             bench_table2_quality, bench_table3_hyperparams,

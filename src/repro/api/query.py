@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -28,11 +27,13 @@ from repro.api.memo import ReuseView, oracle_identity
 from repro.api.policy import ExecutionPolicy, OracleBudgetError
 from repro.core.baselines import (BaselineResult, bargain_filter,
                                   lotus_filter, reference_filter)
+from repro.obs.trace import get_tracer
 from repro.plan.cost import est_oracle_calls
 from repro.plan.executor import PlanExecutor, PlanResult, PreparedPlan
 from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
 from repro.plan.join import JoinResult, sem_join
 from repro.plan.optimizer import NodeEstimate, node_estimates
+from repro.utils.timing import monotonic
 
 
 # ------------------------------------------------------------------ results
@@ -58,12 +59,43 @@ class QueryResult:
     # tuples decided by replaying session-memoized decisions (zero oracle
     # cost; docs/caching.md) — 0 on cold runs and non-reuse paths
     n_replayed: int = 0
+    # optimizer NodeEstimate per leaf (physical order) captured at collect
+    # time — the predictions profile() confronts with the observed truth
+    node_estimates: list = dataclasses.field(default_factory=list)
 
     @property
     def pairs(self) -> np.ndarray:
         if self.pair_mask is None:
             raise ValueError("pairs are only defined for join queries")
         return np.argwhere(self.pair_mask)
+
+    def profile(self) -> str:
+        """Estimated vs observed, per plan node.
+
+        The ``explain()`` tree annotated with what actually happened: the
+        optimizer's predicted oracle calls and selectivity next to the
+        executed node's call count and observed pass rate (docs/observability.md).
+        """
+        lines = [f"QueryProfile({self.kind})  calls={self.n_llm_calls} "
+                 f"(pilot {self.pilot_calls})  replayed={self.n_replayed}  "
+                 f"wall={self.total_time_s:.3f}s"]
+        est_by_name = {nd.name: nd for nd in self.node_estimates}
+        for rec in self.node_log:
+            nd = est_by_name.get(rec.name)
+            obs_sel = rec.n_out / rec.n_in if rec.n_in else 0.0
+            est_calls = "?" if nd is None else f"{nd.est_calls:.0f}"
+            est_sel = ("?" if nd is None or nd.selectivity is None
+                       else f"{nd.selectivity:.2f}")
+            lines.append(
+                f"  {rec.name:<16s} calls={rec.n_llm_calls:>6d} "
+                f"(est {est_calls})  sel={obs_sel:.2f} (est {est_sel})  "
+                f"in={rec.n_in} out={rec.n_out} "
+                f"replayed={rec.n_replayed}")
+        if not self.node_log:
+            for nd in self.node_estimates:
+                lines.append(f"  {nd.name:<16s} calls={self.n_llm_calls:>6d} "
+                             f"(est {nd.est_calls:.0f})")
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -323,10 +355,20 @@ class FilterQuery(Query):
             probed = self._fresh_pilots.setdefault(
                 (pol.seed, pol.pilot_size,
                  getattr(self.handle, "version", 0)), {})
+            tr = get_tracer()
             snap = _snapshot(self._oracles())
-            fresh = ex.pilot(self.expr, skip=set(known) | set(probed))
+            with tr.span("pilot", kind="plan", pilot_size=pol.pilot_size,
+                         n_fresh=len(leaf_by_name) - len(known)) as psp:
+                fresh = ex.pilot(self.expr, skip=set(known) | set(probed))
+            n_pilot = 0
             for oracle, before in snap:
-                self.session._absorb(oracle.stats.delta(before))
+                d = oracle.stats.delta(before)
+                n_pilot += d.n_calls
+                tr.metrics.inc("oracle.calls", d.n_calls)
+                tr.metrics.inc("oracle.input_tokens", d.input_tokens)
+                tr.metrics.inc("oracle.output_tokens", d.output_tokens)
+                self.session._absorb(d)
+            psp.set(calls=n_pilot)
             probed.update(fresh)
             if view is not None:
                 for name, ps in probed.items():
@@ -385,31 +427,46 @@ class FilterQuery(Query):
         pol = self._resolve(policy)
         self._validate(pol)
         self._check_budget(pol, self._estimate_calls(pol))
-        t0 = time.time()
-        # sight every leaf oracle as having touched this table EVEN when
-        # reuse is off: TableHandle.update() must be able to invalidate
-        # stale per-id oracle memos regardless of the policy the oracle was
-        # used under.  Sightings are weak — they never extend oracle
-        # lifetimes
-        for oracle in self._oracles():
-            self.session.memo.note_sighting(self.handle.name, oracle)
-        # proxy spend is tracked separately (session.proxy_stats): proxy
-        # calls are the cheap cascade model, not LLM-oracle spend
-        proxy_snap = _snapshot([self.proxy] if self.proxy is not None else [])
-        if pol.is_baseline:
-            snap = _snapshot(self._oracles())
-            raw = self._run_baseline(pol, self.expr.leaves()[0].oracle)
-        else:
-            # plan first: _prepare absorbs any fresh pilot spend into the
-            # session aggregate, so the snapshot below covers the cascade
-            prepared = self._prepare(pol)
-            snap = _snapshot(self._oracles())
-            raw = self._executor(pol).run(self.expr, prepared=prepared)
-        for oracle, before in snap:
-            self.session._absorb(oracle.stats.delta(before))
-        for proxy, before in proxy_snap:
-            self.session._absorb_proxy(proxy.stats.delta(before))
-        return self._to_result(pol, raw, time.time() - t0)
+        tr = get_tracer()
+        t0 = monotonic()
+        with tr.span("query", kind="query", query="filter",
+                     table=self.handle.name, method=pol.method) as qsp:
+            # sight every leaf oracle as having touched this table EVEN when
+            # reuse is off: TableHandle.update() must be able to invalidate
+            # stale per-id oracle memos regardless of the policy the oracle
+            # was used under.  Sightings are weak — they never extend oracle
+            # lifetimes
+            for oracle in self._oracles():
+                self.session.memo.note_sighting(self.handle.name, oracle)
+            # proxy spend is tracked separately (session.proxy_stats):
+            # proxy calls are the cheap cascade model, not LLM-oracle spend
+            proxy_snap = _snapshot([self.proxy]
+                                   if self.proxy is not None else [])
+            if pol.is_baseline:
+                name = self.expr.leaves()[0].name
+                n = len(self.handle)
+                ests = [NodeEstimate(name=name, est_live_in=float(n),
+                                     est_calls=float(n), selectivity=None)]
+                snap = _snapshot(self._oracles())
+                raw = self._run_baseline(pol, self.expr.leaves()[0].oracle)
+            else:
+                # plan first: _prepare absorbs any fresh pilot spend into
+                # the session aggregate, so the snapshot below covers the
+                # cascade
+                prepared = self._prepare(pol)
+                ests = node_estimates(prepared.physical, len(self.handle),
+                                      prepared.pilot_stats,
+                                      pol.to_csv_config())
+                snap = _snapshot(self._oracles())
+                raw = self._executor(pol).run(self.expr, prepared=prepared)
+            for oracle, before in snap:
+                self.session._absorb(oracle.stats.delta(before))
+            for proxy, before in proxy_snap:
+                self.session._absorb_proxy(proxy.stats.delta(before))
+            res = self._to_result(pol, raw, monotonic() - t0, ests)
+            qsp.set(calls=res.n_llm_calls, n_replayed=res.n_replayed)
+            tr.metrics.inc("query.collects")
+        return res
 
     def _run_baseline(self, pol: ExecutionPolicy, oracle) -> BaselineResult:
         n = len(self.handle)
@@ -418,7 +475,9 @@ class FilterQuery(Query):
         fn = lotus_filter if pol.method == "lotus" else bargain_filter
         return fn(n, self.proxy, oracle, **dict(pol.baseline))
 
-    def _to_result(self, pol, raw, dt: float) -> QueryResult:
+    def _to_result(self, pol, raw, dt: float,
+                   ests: Optional[list] = None) -> QueryResult:
+        ests = ests or []
         if isinstance(raw, BaselineResult):
             name = self.expr.leaves()[0].name
             return QueryResult(
@@ -427,7 +486,8 @@ class FilterQuery(Query):
                 n_proxy_calls=raw.n_proxy_calls,
                 input_tokens=raw.input_tokens,
                 output_tokens=raw.output_tokens, order=[name], node_log=[],
-                round_log={}, total_time_s=dt, policy=pol, raw=raw)
+                round_log={}, total_time_s=dt, policy=pol, raw=raw,
+                node_estimates=ests)
         assert isinstance(raw, PlanResult)
         return QueryResult(
             kind="filter", mask=raw.mask, n_llm_calls=raw.n_llm_calls,
@@ -436,7 +496,8 @@ class FilterQuery(Query):
             order=list(raw.order), node_log=list(raw.node_log),
             round_log={name: fr.round_log for name, fr in raw.results.items()},
             total_time_s=dt, policy=pol, raw=raw,
-            n_replayed=sum(rec.n_replayed for rec in raw.node_log))
+            n_replayed=sum(rec.n_replayed for rec in raw.node_log),
+            node_estimates=ests)
 
 
 class JoinQuery(Query):
@@ -492,52 +553,70 @@ class JoinQuery(Query):
         pol = self._resolve(policy)
         self._validate(pol)
         self._check_budget(pol, self._estimate_calls(pol))
-        t0 = time.time()
-        # pair-oracle sightings: mutations of either side must clear this
-        # oracle's memo outright (pair ids reindex; see docs/caching.md)
-        self.session.memo.note_pair_oracle(self.left.name, self.oracle)
-        self.session.memo.note_pair_oracle(self.right.name, self.oracle)
-        cfg = pol.to_join_config()
-        if pol.reuse_memo:
-            jm = self.session.memo.lookup_join(self.left, self.right,
-                                               self.oracle, cfg)
-            if jm is not None:
-                # replay: same predicate, same join semantics, both tables
-                # unchanged — zero oracle calls, bit-identical pair mask
-                raw = JoinResult(
-                    pair_mask=jm.pair_mask.copy(), n_llm_calls=0,
-                    input_tokens=0, output_tokens=0, n_voted=0,
-                    n_fallback=0, refine_rounds=0,
-                    total_time_s=time.time() - t0, round_log=[])
-                return QueryResult(
-                    kind="join", pair_mask=raw.pair_mask, n_llm_calls=0,
-                    pilot_calls=0, n_proxy_calls=0, input_tokens=0,
-                    output_tokens=0,
-                    order=[f"{self.left.name} JOIN {self.right.name}"],
-                    node_log=[], round_log={"join": []},
-                    total_time_s=raw.total_time_s, policy=pol, raw=raw,
-                    n_replayed=int(raw.pair_mask.size))
-        assign_l = assign_r = None
-        if pol.reuse_clustering:
-            assign_l = self.left.precluster(cfg.n_clusters_left, cfg.seed)
-            assign_r = self.right.precluster(cfg.n_clusters_right, cfg.seed)
-        snap = _snapshot([self.oracle])
-        raw: JoinResult = sem_join(self.left.embeddings,
-                                   self.right.embeddings, self.oracle, cfg,
-                                   assign_left=assign_l,
-                                   assign_right=assign_r)
-        for oracle, before in snap:
-            self.session._absorb(oracle.stats.delta(before))
-        if pol.reuse_memo:
-            # record for later replay (mirrors the filter-side rule:
-            # recording is skipped only when reuse is pinned off — the
-            # legacy shim sessions must never accumulate state)
-            self.session.memo.record_join(self.left, self.right,
-                                          self.oracle, cfg, raw.pair_mask)
+        tr = get_tracer()
+        t0 = monotonic()
+        name = f"{self.left.name} JOIN {self.right.name}"
+        ests = [NodeEstimate(
+            name=name, est_live_in=float(len(self.left) * len(self.right)),
+            est_calls=self._estimate_calls(pol), selectivity=None)]
+        with tr.span("query", kind="query", query="join",
+                     table=name, method=pol.method) as qsp:
+            # pair-oracle sightings: mutations of either side must clear
+            # this oracle's memo outright (pair ids reindex; see
+            # docs/caching.md)
+            self.session.memo.note_pair_oracle(self.left.name, self.oracle)
+            self.session.memo.note_pair_oracle(self.right.name, self.oracle)
+            cfg = pol.to_join_config()
+            if pol.reuse_memo:
+                jm = self.session.memo.lookup_join(self.left, self.right,
+                                                   self.oracle, cfg)
+                if jm is not None:
+                    # replay: same predicate, same join semantics, both
+                    # tables unchanged — zero oracle calls, bit-identical
+                    # pair mask
+                    raw = JoinResult(
+                        pair_mask=jm.pair_mask.copy(), n_llm_calls=0,
+                        input_tokens=0, output_tokens=0, n_voted=0,
+                        n_fallback=0, refine_rounds=0,
+                        total_time_s=monotonic() - t0, round_log=[])
+                    qsp.set(calls=0, n_replayed=int(raw.pair_mask.size))
+                    tr.metrics.inc("query.collects")
+                    tr.metrics.inc("memo.replays")
+                    return QueryResult(
+                        kind="join", pair_mask=raw.pair_mask, n_llm_calls=0,
+                        pilot_calls=0, n_proxy_calls=0, input_tokens=0,
+                        output_tokens=0, order=[name],
+                        node_log=[], round_log={"join": []},
+                        total_time_s=raw.total_time_s, policy=pol, raw=raw,
+                        n_replayed=int(raw.pair_mask.size),
+                        node_estimates=ests)
+            assign_l = assign_r = None
+            if pol.reuse_clustering:
+                assign_l = self.left.precluster(cfg.n_clusters_left,
+                                                cfg.seed)
+                assign_r = self.right.precluster(cfg.n_clusters_right,
+                                                 cfg.seed)
+            snap = _snapshot([self.oracle])
+            raw: JoinResult = sem_join(self.left.embeddings,
+                                       self.right.embeddings, self.oracle,
+                                       cfg, assign_left=assign_l,
+                                       assign_right=assign_r)
+            for oracle, before in snap:
+                self.session._absorb(oracle.stats.delta(before))
+            if pol.reuse_memo:
+                # record for later replay (mirrors the filter-side rule:
+                # recording is skipped only when reuse is pinned off — the
+                # legacy shim sessions must never accumulate state)
+                self.session.memo.record_join(self.left, self.right,
+                                              self.oracle, cfg,
+                                              raw.pair_mask)
+            qsp.set(calls=raw.n_llm_calls)
+            tr.metrics.inc("query.collects")
         return QueryResult(
             kind="join", pair_mask=raw.pair_mask,
             n_llm_calls=raw.n_llm_calls, pilot_calls=0, n_proxy_calls=0,
             input_tokens=raw.input_tokens, output_tokens=raw.output_tokens,
-            order=[f"{self.left.name} JOIN {self.right.name}"], node_log=[],
+            order=[name], node_log=[],
             round_log={"join": raw.round_log},
-            total_time_s=time.time() - t0, policy=pol, raw=raw)
+            total_time_s=monotonic() - t0, policy=pol, raw=raw,
+            node_estimates=ests)

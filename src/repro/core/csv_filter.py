@@ -30,7 +30,6 @@ per-cluster calls would.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -41,6 +40,8 @@ from repro.core import theory
 from repro.core.clustering import kmeans
 from repro.core.oracle import AsyncOracleDispatcher, SyncOracleDispatcher
 from repro.core.voting import sim_vote, uni_vote, vote_clusters
+from repro.obs.trace import get_tracer
+from repro.utils.timing import monotonic
 
 
 @dataclasses.dataclass
@@ -179,177 +180,216 @@ def _recluster_or_fallback(emb, oracle, cfg, pending, depth, result, decided):
     or a k-means re-split.  Both executors MUST share this — the
     bit-identity contract depends on identical key/fallback derivation.
     Returns (next_queue, n_fallback_added, recluster_seconds)."""
-    if depth > cfg.max_recluster:
-        # final fallback: direct LLM evaluation (bounded error by design)
-        labels = oracle(pending)
-        result[pending] = labels
-        decided[pending] = True
-        return [], len(pending), 0.0
-    t_rc = time.time()
-    key = jax.random.key(cfg.seed + depth)
-    k = min(cfg.n_clusters, len(pending))
-    if len(pending) <= cfg.min_sample:
-        labels = oracle(pending)
-        result[pending] = labels
-        decided[pending] = True
-        return [], len(pending), time.time() - t_rc
-    _, sub_assign, _ = kmeans(key, jnp.asarray(emb[pending]), k,
-                              max_iters=cfg.kmeans_iters)
-    sub_assign = np.asarray(sub_assign)
-    queue = [pending[sub_assign == c] for c in range(k)]
-    return [c for c in queue if len(c)], 0, time.time() - t_rc
+    tr = get_tracer()
+    with tr.span("partition", kind="partition", depth=depth,
+                 n_pending=int(len(pending))) as sp:
+        if depth > cfg.max_recluster:
+            # final fallback: direct LLM evaluation (bounded error by design)
+            labels = oracle(pending)
+            result[pending] = labels
+            decided[pending] = True
+            sp.set(outcome="fallback")
+            return [], len(pending), 0.0
+        t_rc = monotonic()
+        key = jax.random.key(cfg.seed + depth)
+        k = min(cfg.n_clusters, len(pending))
+        if len(pending) <= cfg.min_sample:
+            labels = oracle(pending)
+            result[pending] = labels
+            decided[pending] = True
+            sp.set(outcome="small_fallback")
+            return [], len(pending), monotonic() - t_rc
+        _, sub_assign, _ = kmeans(key, jnp.asarray(emb[pending]), k,
+                                  max_iters=cfg.kmeans_iters)
+        sub_assign = np.asarray(sub_assign)
+        queue = [pending[sub_assign == c] for c in range(k)]
+        queue = [c for c in queue if len(c)]
+        sp.set(outcome="recluster", n_children=len(queue))
+        return queue, 0, monotonic() - t_rc
 
 
 def _run_round_executor(emb, oracle, cfg, rng, xi, result, decided,
                         cluster_log, round_log, queue):
     """plan → sample → oracle → vote → partition, one round per iteration."""
+    tr = get_tracer()
     lb, ub = cfg.lb, cfg.ub_
     n_voted = n_fallback = 0
     rounds_used = 0
     recluster_time = 0.0
     depth = 0
     while queue and depth <= cfg.max_recluster:
-        plan = plan_round(queue, rng, xi, cfg, depth)
-        n_waves = max(1, min(int(cfg.pipeline_depth), len(plan.clusters)))
-        bounds = np.linspace(0, len(plan.clusters), n_waves + 1).astype(int)
-        waves = [plan.clusters[bounds[k]:bounds[k + 1]]
-                 for k in range(n_waves)]
-        waves = [w for w in waves if w]
+        with tr.span("round", kind="round", depth=depth,
+                     n_clusters=len(queue), executor="round") as rsp:
+            t_round = monotonic()
+            with tr.span("plan", kind="plan"):
+                plan = plan_round(queue, rng, xi, cfg, depth)
+            n_waves = max(1, min(int(cfg.pipeline_depth),
+                                 len(plan.clusters)))
+            bounds = np.linspace(0, len(plan.clusters),
+                                 n_waves + 1).astype(int)
+            waves = [plan.clusters[bounds[k]:bounds[k + 1]]
+                     for k in range(n_waves)]
+            waves = [w for w in waves if w]
 
-        dispatcher = (AsyncOracleDispatcher(oracle) if len(waves) > 1
-                      else SyncOracleDispatcher(oracle))
-        handles = [dispatcher.submit(
-            np.concatenate([cp.sample_ids for cp in waves[0]]))]
-        undetermined = []
-        round_voted = 0
-        oracle_batches = []
-        try:
-            for k, wave in enumerate(waves):
-                if k + 1 < len(waves):
-                    # overlap: next wave's oracle prefill starts before this
-                    # wave's voting touches the device
-                    handles.append(dispatcher.submit(
-                        np.concatenate([cp.sample_ids
-                                        for cp in waves[k + 1]])))
-                flat_labels = handles[k].result()
-                oracle_batches.append(int(len(flat_labels)))
-                offsets = np.cumsum([cp.n_sample for cp in wave])[:-1]
-                labels_by_cluster = np.split(flat_labels, offsets)
+            dispatcher = (AsyncOracleDispatcher(oracle) if len(waves) > 1
+                          else SyncOracleDispatcher(oracle))
+            handles = []
+            undetermined = []
+            round_voted = 0
+            oracle_batches = []
+            try:
+                for k, wave in enumerate(waves):
+                    with tr.span("oracle", kind="oracle", wave=k) as osp:
+                        if k == 0:
+                            # submitting wave 0 here (not before the loop)
+                            # keeps submission order — submit(0), submit(1),
+                            # result(0) — with submit+wait inside the span
+                            handles.append(dispatcher.submit(
+                                np.concatenate([cp.sample_ids
+                                                for cp in waves[0]])))
+                        if k + 1 < len(waves):
+                            # overlap: next wave's oracle prefill starts
+                            # before this wave's voting touches the device
+                            handles.append(dispatcher.submit(
+                                np.concatenate([cp.sample_ids
+                                                for cp in waves[k + 1]])))
+                        flat_labels = handles[k].result()
+                        osp.set(batch=int(len(flat_labels)))
+                    oracle_batches.append(int(len(flat_labels)))
+                    offsets = np.cumsum([cp.n_sample for cp in wave])[:-1]
+                    labels_by_cluster = np.split(flat_labels, offsets)
 
-                for cp, labels in zip(wave, labels_by_cluster):
-                    result[cp.sample_ids] = labels
-                    decided[cp.sample_ids] = True
+                    for cp, labels in zip(wave, labels_by_cluster):
+                        result[cp.sample_ids] = labels
+                        decided[cp.sample_ids] = True
 
-                votes = _vote_wave(wave, labels_by_cluster, emb, cfg, lb, ub)
-                for i, cp in enumerate(wave):
-                    labels = labels_by_cluster[i]
-                    if len(cp.rest_ids) == 0:
-                        cluster_log.append({
-                            "size": cp.size, "sampled": cp.n_sample,
-                            "score": float(np.mean(labels)),
-                            "depth": depth, "outcome": "exhausted"})
-                        continue
-                    vr = votes[i]
-                    result[cp.rest_ids[vr.decided_true]] = True
-                    decided[cp.rest_ids[vr.decided_true]] = True
-                    result[cp.rest_ids[vr.decided_false]] = False
-                    decided[cp.rest_ids[vr.decided_false]] = True
-                    voted = len(vr.decided_true) + len(vr.decided_false)
-                    n_voted += voted
-                    round_voted += voted
-                    if len(vr.undetermined):
-                        undetermined.append(cp.rest_ids[vr.undetermined])
-                    cluster_log.append({
-                        "size": cp.size, "sampled": cp.n_sample,
-                        "score": float(np.mean(labels)),
-                        "voted": int(voted),
-                        "undetermined": int(len(vr.undetermined)),
-                        "depth": depth,
-                        "outcome": ("vote" if not len(vr.undetermined)
-                                    else "recluster"),
-                    })
-        finally:
-            dispatcher.close()
+                    with tr.span("vote", kind="vote", wave=k,
+                                 n_clusters=len(wave)):
+                        votes = _vote_wave(wave, labels_by_cluster, emb,
+                                           cfg, lb, ub)
+                        for i, cp in enumerate(wave):
+                            labels = labels_by_cluster[i]
+                            if len(cp.rest_ids) == 0:
+                                cluster_log.append({
+                                    "size": cp.size, "sampled": cp.n_sample,
+                                    "score": float(np.mean(labels)),
+                                    "depth": depth, "outcome": "exhausted"})
+                                continue
+                            vr = votes[i]
+                            result[cp.rest_ids[vr.decided_true]] = True
+                            decided[cp.rest_ids[vr.decided_true]] = True
+                            result[cp.rest_ids[vr.decided_false]] = False
+                            decided[cp.rest_ids[vr.decided_false]] = True
+                            voted = (len(vr.decided_true)
+                                     + len(vr.decided_false))
+                            n_voted += voted
+                            round_voted += voted
+                            if len(vr.undetermined):
+                                undetermined.append(
+                                    cp.rest_ids[vr.undetermined])
+                            cluster_log.append({
+                                "size": cp.size, "sampled": cp.n_sample,
+                                "score": float(np.mean(labels)),
+                                "voted": int(voted),
+                                "undetermined": int(len(vr.undetermined)),
+                                "depth": depth,
+                                "outcome": ("vote"
+                                            if not len(vr.undetermined)
+                                            else "recluster"),
+                            })
+            finally:
+                dispatcher.close()
 
-        n_undet = int(sum(len(u) for u in undetermined))
-        round_log.append(RoundResult(
-            depth=depth, n_clusters=len(plan.clusters),
-            n_sampled=plan.n_sampled, n_voted=round_voted,
-            n_undetermined=n_undet, waves=len(waves),
-            oracle_batches=oracle_batches))
+            n_undet = int(sum(len(u) for u in undetermined))
+            round_log.append(RoundResult(
+                depth=depth, n_clusters=len(plan.clusters),
+                n_sampled=plan.n_sampled, n_voted=round_voted,
+                n_undetermined=n_undet, waves=len(waves),
+                oracle_batches=oracle_batches))
+            rsp.set(n_sampled=plan.n_sampled, n_voted=round_voted,
+                    n_undetermined=n_undet, waves=len(waves))
+            tr.metrics.inc("driver.rounds")
+            tr.metrics.observe("round.wall_s", monotonic() - t_round)
 
-        if not undetermined:
-            break
-        pending = np.concatenate(undetermined)
-        depth += 1
-        rounds_used = depth
-        queue, fb, dt = _recluster_or_fallback(emb, oracle, cfg, pending,
-                                               depth, result, decided)
-        n_fallback += fb
-        recluster_time += dt
+            if not undetermined:
+                break
+            pending = np.concatenate(undetermined)
+            depth += 1
+            rounds_used = depth
+            queue, fb, dt = _recluster_or_fallback(
+                emb, oracle, cfg, pending, depth, result, decided)
+            n_fallback += fb
+            recluster_time += dt
     return n_voted, n_fallback, rounds_used, recluster_time
 
 
 def _run_sequential_executor(emb, oracle, cfg, rng, xi, result, decided,
                              cluster_log, round_log, queue):
     """The pre-refactor cluster-at-a-time loop (regression baseline)."""
+    tr = get_tracer()
     lb, ub = cfg.lb, cfg.ub_
     n_voted = n_fallback = 0
     rounds_used = 0
     recluster_time = 0.0
     depth = 0
     while queue and depth <= cfg.max_recluster:
-        undetermined = []
-        for cluster in queue:
-            m = len(cluster)
-            n_sample = theory.choose_sample_size(m, xi, cfg.min_sample)
-            sample_local = rng.choice(m, size=n_sample, replace=False)
-            sample_ids = cluster[sample_local]
-            labels = oracle(sample_ids)
-            result[sample_ids] = labels
-            decided[sample_ids] = True
+        with tr.span("round", kind="round", depth=depth,
+                     n_clusters=len(queue), executor="sequential"):
+            undetermined = []
+            for cluster in queue:
+                m = len(cluster)
+                n_sample = theory.choose_sample_size(m, xi, cfg.min_sample)
+                sample_local = rng.choice(m, size=n_sample, replace=False)
+                sample_ids = cluster[sample_local]
+                labels = oracle(sample_ids)
+                result[sample_ids] = labels
+                decided[sample_ids] = True
 
-            rest_mask = np.ones(m, dtype=bool)
-            rest_mask[sample_local] = False
-            rest_ids = cluster[rest_mask]
-            if len(rest_ids) == 0:
-                cluster_log.append({"size": m, "sampled": n_sample,
-                                    "score": float(np.mean(labels)),
-                                    "depth": depth, "outcome": "exhausted"})
-                continue
+                rest_mask = np.ones(m, dtype=bool)
+                rest_mask[sample_local] = False
+                rest_ids = cluster[rest_mask]
+                if len(rest_ids) == 0:
+                    cluster_log.append({
+                        "size": m, "sampled": n_sample,
+                        "score": float(np.mean(labels)),
+                        "depth": depth, "outcome": "exhausted"})
+                    continue
 
-            if cfg.vote == "sim":
-                vr = sim_vote(emb[rest_ids], emb[sample_ids],
-                              labels.astype(np.float32), lb, ub,
-                              cfg.sim_bandwidth)
-            else:
-                vr = uni_vote(labels.astype(np.float32), len(rest_ids), lb, ub)
+                if cfg.vote == "sim":
+                    vr = sim_vote(emb[rest_ids], emb[sample_ids],
+                                  labels.astype(np.float32), lb, ub,
+                                  cfg.sim_bandwidth)
+                else:
+                    vr = uni_vote(labels.astype(np.float32), len(rest_ids),
+                                  lb, ub)
 
-            result[rest_ids[vr.decided_true]] = True
-            decided[rest_ids[vr.decided_true]] = True
-            result[rest_ids[vr.decided_false]] = False
-            decided[rest_ids[vr.decided_false]] = True
-            n_voted += len(vr.decided_true) + len(vr.decided_false)
-            if len(vr.undetermined):
-                undetermined.append(rest_ids[vr.undetermined])
-            cluster_log.append({
-                "size": m, "sampled": n_sample,
-                "score": float(np.mean(labels)),
-                "voted": int(len(vr.decided_true) + len(vr.decided_false)),
-                "undetermined": int(len(vr.undetermined)),
-                "depth": depth,
-                "outcome": "vote" if not len(vr.undetermined) else "recluster",
-            })
+                result[rest_ids[vr.decided_true]] = True
+                decided[rest_ids[vr.decided_true]] = True
+                result[rest_ids[vr.decided_false]] = False
+                decided[rest_ids[vr.decided_false]] = True
+                n_voted += len(vr.decided_true) + len(vr.decided_false)
+                if len(vr.undetermined):
+                    undetermined.append(rest_ids[vr.undetermined])
+                cluster_log.append({
+                    "size": m, "sampled": n_sample,
+                    "score": float(np.mean(labels)),
+                    "voted": int(len(vr.decided_true)
+                                 + len(vr.decided_false)),
+                    "undetermined": int(len(vr.undetermined)),
+                    "depth": depth,
+                    "outcome": ("vote" if not len(vr.undetermined)
+                                else "recluster"),
+                })
 
-        if not undetermined:
-            break
-        pending = np.concatenate(undetermined)
-        depth += 1
-        rounds_used = depth
-        queue, fb, dt = _recluster_or_fallback(emb, oracle, cfg, pending,
-                                               depth, result, decided)
-        n_fallback += fb
-        recluster_time += dt
+            if not undetermined:
+                break
+            pending = np.concatenate(undetermined)
+            depth += 1
+            rounds_used = depth
+            queue, fb, dt = _recluster_or_fallback(
+                emb, oracle, cfg, pending, depth, result, decided)
+            n_fallback += fb
+            recluster_time += dt
     return n_voted, n_fallback, rounds_used, recluster_time
 
 
@@ -380,7 +420,7 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
     if cfg.executor not in ("round", "sequential"):
         raise ValueError(f"unknown executor {cfg.executor!r}; "
                          "expected 'round' or 'sequential'")
-    t0 = time.time()
+    t0 = monotonic()
     rng = np.random.default_rng(cfg.seed)
     n = embeddings.shape[0]
     emb = np.asarray(embeddings, dtype=np.float32)
@@ -430,6 +470,12 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
             f"driver left {int(undecided.sum())} tuple(s) undecided — "
             "executor invariant violated")
     delta = oracle.stats.delta(stats_before)
+    metrics = get_tracer().metrics
+    metrics.inc("oracle.calls", delta.n_calls)
+    metrics.inc("oracle.input_tokens", delta.input_tokens)
+    metrics.inc("oracle.output_tokens", delta.output_tokens)
+    metrics.inc("driver.voted", n_voted)
+    metrics.inc("driver.fallback", n_fallback)
     return FilterResult(
         mask=result,
         n_llm_calls=delta.n_calls,
@@ -439,7 +485,7 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         n_fallback=n_fallback,
         recluster_rounds=rounds_used,
         recluster_time_s=recluster_time,
-        total_time_s=time.time() - t0,
+        total_time_s=monotonic() - t0,
         cluster_log=cluster_log,
         xi_used=xi,
         round_log=round_log,

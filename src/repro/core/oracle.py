@@ -60,6 +60,18 @@ class OracleStats:
         return (float(np.mean(self.batch_sizes))
                 if self.batch_sizes else 0.0)
 
+    def metrics_view(self) -> dict:
+        """Unified-name view for ``MetricsRegistry.sync_from`` (this
+        dataclass stays the per-oracle accounting of record; the view is
+        read-only — see docs/observability.md)."""
+        return {
+            "oracle.calls": self.n_calls,
+            "oracle.cached": self.n_cached,
+            "oracle.input_tokens": self.input_tokens,
+            "oracle.output_tokens": self.output_tokens,
+            "oracle.mean_batch_size": self.mean_batch_size,
+        }
+
 
 @dataclasses.dataclass
 class StatsScope:

@@ -8,7 +8,6 @@ import ast  # noqa: E402
 import json  # noqa: E402
 import pathlib  # noqa: E402
 import re  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
@@ -24,6 +23,7 @@ from repro.models import lm  # noqa: E402
 from repro.models.config import SHAPES  # noqa: E402
 from repro.train.optimizer import OptConfig, adamw_init, opt_logical_axes  # noqa: E402
 from repro.train.trainer import make_train_step  # noqa: E402
+from repro.utils.timing import monotonic  # noqa: E402
 
 ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
 
@@ -215,7 +215,7 @@ def build_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None,
     p_shard = _tree_shardings(mesh, rules, p_axes, params_abs)
     specs = input_specs(cfg, shape)
 
-    t0 = time.time()
+    t0 = monotonic()
     with sharding_context(rules), mesh:
         if shape.kind == "train":
             oc = oc or OptConfig()
@@ -278,9 +278,9 @@ def build_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None,
                 donate_argnums=(1,) if donate else (),
             ).lower(params_abs, cache_abs, specs["tokens"], specs["pos"])
 
-        t_lower = time.time() - t0
+        t_lower = monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = monotonic() - t0 - t_lower
 
     mem = _mem_dict(compiled)
     cost = _cost_dict(compiled)

@@ -29,6 +29,8 @@ from repro.core.operators import accuracy_f1
 from repro.data import make_dataset, HashTokenizer
 from repro.embeddings import EmbeddingModel
 from repro.models import lm
+from repro.obs import (MetricsRegistry, Tracer, registry_to_prometheus,
+                       set_tracer, write_run_profile)
 from repro.serving import ServingEngine
 
 SERVICE_PREDICATES = [
@@ -37,6 +39,48 @@ SERVICE_PREDICATES = [
     "the review discusses the plot",
     "the review would recommend the movie",
 ]
+
+
+def start_metrics_server(registry: MetricsRegistry, port: int):
+    """Prometheus-style text endpoint on a daemon thread (stdlib only).
+
+    GET /metrics (or any path) returns the live registry dump; scrape it
+    while a long serve run is in flight.  Returns the server object so
+    callers/tests can ``shutdown()`` it.
+    """
+    import http.server
+    import threading
+
+    class Handler(http.server.BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 - http.server API
+            body = registry_to_prometheus(registry).encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # quiet: no per-scrape stderr spam
+            pass
+
+    srv = http.server.ThreadingHTTPServer(("0.0.0.0", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True,
+                     name="metrics-server").start()
+    print(f"[serve] metrics at http://localhost:{srv.server_address[1]}"
+          "/metrics")
+    return srv
+
+
+def export_trace(trace_dir: str, tracer: Tracer, registry: MetricsRegistry,
+                 *stats_objects):
+    """Sync legacy stat objects into the registry and write all sinks."""
+    registry.sync_from(*[s for s in stats_objects if s is not None])
+    files = write_run_profile(pathlib.Path(trace_dir), tracer, registry)
+    n_spans = len(tracer.spans())
+    print(f"[serve] trace: {n_spans} spans -> {trace_dir} "
+          f"(spans.jsonl, trace.json, ticks.jsonl, metrics.prom, "
+          f"metrics.json)")
+    return files
 
 
 def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
@@ -77,6 +121,7 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
     print(f"[serve] session checkpointed to {state_dir} — rerun to replay "
           "at 0 LLM calls")
     service.close()
+    return sess, results
 
 
 def main():
@@ -103,7 +148,24 @@ def main():
                          "overlaps voting on wave k (--service mode)")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="engine device batch cap per bucket")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="enable tracing; write spans.jsonl, Perfetto "
+                         "trace.json, ticks.jsonl, metrics.prom and "
+                         "metrics.json under DIR on exit")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
+                    help="serve live Prometheus-style /metrics on PORT "
+                         "(0 = off)")
     args = ap.parse_args()
+
+    registry = MetricsRegistry()
+    tracer = None
+    if args.trace_dir or args.metrics_port:
+        # live metrics need the tracer installed even when only --metrics-port
+        # is given: instrumented code publishes through get_tracer().metrics
+        tracer = Tracer(metrics=registry)
+        set_tracer(tracer)
+    if args.metrics_port:
+        start_metrics_server(registry, args.metrics_port)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn_impl:
@@ -117,8 +179,13 @@ def main():
     embeddings = encoder.encode(ds.texts)
 
     if args.service > 0:
-        serve_concurrent(engine, tok, ds, embeddings, args.service,
-                         args.state_dir, pipeline_depth=args.pipeline_depth)
+        sess, results = serve_concurrent(
+            engine, tok, ds, embeddings, args.service,
+            args.state_dir, pipeline_depth=args.pipeline_depth)
+        if tracer is not None and args.trace_dir:
+            print(results[0].profile())
+            export_trace(args.trace_dir, tracer, registry,
+                         sess.scheduler.stats, engine.batcher)
         return
 
     oracle = ModelOracle(engine, tok, args.predicate, ds.texts)
@@ -136,6 +203,9 @@ def main():
           f"pass; {r.n_llm_calls} LLM calls "
           f"({args.n/max(1, r.n_llm_calls):.1f}x reduction); "
           f"engine={engine.stats}")
+    if tracer is not None and args.trace_dir:
+        export_trace(args.trace_dir, tracer, registry,
+                     getattr(oracle, "stats", None), engine.batcher)
 
 
 if __name__ == "__main__":

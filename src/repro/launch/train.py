@@ -11,7 +11,6 @@ checkpoint (elastic: a different mesh shape re-shards on restore).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ from repro.data.loader import PackedLoader
 from repro.distributed.api import sharding_context
 from repro.distributed.rules import MeshRules
 from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.utils.timing import monotonic
 from repro.models import lm
 from repro.train import OptConfig, adamw_init, make_train_step
 from repro.train.optimizer import opt_logical_axes
@@ -75,14 +75,14 @@ def main():
                   f"(re-sharded onto {dict(mesh.shape)})")
         jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
-        t0 = time.time()
+        t0 = monotonic()
         for step in range(start, args.steps):
             batch = {k: jnp.asarray(v)
                      for k, v in loader.batch_at(step).items()}
             params, opt, m = jit_step(params, opt, batch)
             if step % 10 == 0 or step == args.steps - 1:
                 tput = args.batch * args.seq * max(1, step - start + 1) / (
-                    time.time() - t0)
+                    monotonic() - t0)
                 print(f"[train] step {step:5d} loss={float(m['loss']):.4f} "
                       f"gnorm={float(m['grad_norm']):.2f} tok/s={tput:,.0f}",
                       flush=True)

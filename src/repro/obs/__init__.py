@@ -1,0 +1,57 @@
+"""Unified observability: hierarchical tracing, metrics, export sinks.
+
+See docs/observability.md for the span taxonomy and metric naming scheme.
+"""
+from repro.obs.export import (
+    registry_to_prometheus,
+    spans_to_perfetto,
+    write_perfetto,
+    write_prometheus,
+    write_run_profile,
+    write_spans_jsonl,
+    write_ticks_jsonl,
+)
+from repro.obs.metrics import (
+    DEFAULT_BOUNDS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_REGISTRY,
+    NullRegistry,
+)
+from repro.obs.trace import (
+    NULL_SPAN,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    use_tracer,
+)
+
+__all__ = [
+    "Counter",
+    "DEFAULT_BOUNDS",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_REGISTRY",
+    "NULL_SPAN",
+    "NULL_TRACER",
+    "NullRegistry",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "registry_to_prometheus",
+    "set_tracer",
+    "spans_to_perfetto",
+    "use_tracer",
+    "write_perfetto",
+    "write_prometheus",
+    "write_run_profile",
+    "write_spans_jsonl",
+    "write_ticks_jsonl",
+]

@@ -21,16 +21,17 @@ counts match under a fixed seed (tests/test_plan.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional
 
 import numpy as np
 
 from repro.core.csv_filter import (CSVConfig, FilterResult, replay_result,
                                    semantic_filter)
+from repro.obs.trace import get_tracer
 from repro.plan.cost import PredStats, pilot_predicates
 from repro.plan.expr import And, Expr, Not, Or, Pred, needs_ordering
 from repro.plan.optimizer import PlanEstimate, optimize
+from repro.utils.timing import monotonic
 
 # decorrelates the pilot id draw from the CSV driver's cfg.seed stream
 _PILOT_STREAM = 0x9E3779B9
@@ -150,7 +151,17 @@ class PlanExecutor:
         self._check_names(expr)
         if self.optimize and needs_ordering(expr):
             if pilot_stats is None:
-                pilot_stats = self.pilot(expr)
+                tr = get_tracer()
+                with tr.span("pilot", kind="plan",
+                             pilot_size=self.pilot_size) as sp:
+                    pilot_stats = self.pilot(expr)
+                    n_pilot = sum(s.pilot_calls for s in pilot_stats.values())
+                    sp.set(calls=n_pilot)
+                    tr.metrics.inc("oracle.calls", n_pilot)
+                    tr.metrics.inc("oracle.input_tokens", sum(
+                        s.pilot_input_tokens for s in pilot_stats.values()))
+                    tr.metrics.inc("oracle.output_tokens", sum(
+                        s.pilot_output_tokens for s in pilot_stats.values()))
             estimate = optimize(expr, self.n, pilot_stats, self.cfg)
             return PreparedPlan(physical=estimate.ordered, estimate=estimate,
                                 pilot_stats=pilot_stats)
@@ -158,7 +169,7 @@ class PlanExecutor:
 
     def run(self, expr: Expr,
             prepared: Optional[PreparedPlan] = None) -> PlanResult:
-        t0 = time.time()
+        t0 = monotonic()
         if prepared is None:
             prepared = self.prepare(expr)
         else:
@@ -186,7 +197,7 @@ class PlanExecutor:
             naive_order=[p.name for p in expr.leaves()],
             node_log=self._node_log, results=self._results,
             estimate=estimate, pilot_stats=pilot_stats,
-            total_time_s=time.time() - t0)
+            total_time_s=monotonic() - t0)
 
     @staticmethod
     def _check_names(expr: Expr) -> None:
@@ -239,11 +250,16 @@ class PlanExecutor:
         hit = self.memo.lookup(leaf, cfg) if self.memo is not None else None
         if hit is not None:
             return self._replay_pred(leaf, cfg, live, hit)
-        assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
-                  if self.reuse_clustering else None)
-        subset = None if len(live) == self.n else live
-        fr = semantic_filter(self.table.embeddings, leaf.oracle, cfg,
-                             precomputed_assign=assign, subset_ids=subset)
+        tr = get_tracer()
+        with tr.span("plan_node", kind="plan_node", node=leaf.name,
+                     n_in=int(len(live))) as sp:
+            assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
+                      if self.reuse_clustering else None)
+            subset = None if len(live) == self.n else live
+            fr = semantic_filter(self.table.embeddings, leaf.oracle, cfg,
+                                 precomputed_assign=assign,
+                                 subset_ids=subset)
+            sp.set(n_out=int(fr.mask.sum()), calls=int(fr.n_llm_calls))
         if self.memo is not None:
             self.memo.record(leaf, cfg, fr, live)
         self._log_node(leaf, live, fr)
@@ -255,20 +271,27 @@ class PlanExecutor:
         replay the stored mask at zero oracle cost; rows of clusters dirtied
         by ``append``/``update`` since the memo's table version are re-voted
         through the normal driver, restricted to that dirty subset."""
-        t0 = time.time()
-        out = np.zeros(self.n, dtype=bool)
-        replay = live[np.isin(live, hit.replay_rows)]
-        out[replay] = hit.mask[replay]
-        sub = None
-        rerun = live[np.isin(live, hit.rerun_rows)]
-        if len(rerun):
-            assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
-                      if self.reuse_clustering else None)
-            sub = semantic_filter(self.table.embeddings, leaf.oracle, cfg,
-                                  precomputed_assign=assign, subset_ids=rerun)
-            out[rerun] = sub.mask[rerun]
+        tr = get_tracer()
+        t0 = monotonic()
+        with tr.span("plan_node", kind="plan_node", node=leaf.name,
+                     n_in=int(len(live)), replay=True) as sp:
+            out = np.zeros(self.n, dtype=bool)
+            replay = live[np.isin(live, hit.replay_rows)]
+            out[replay] = hit.mask[replay]
+            sub = None
+            rerun = live[np.isin(live, hit.rerun_rows)]
+            if len(rerun):
+                assign = (self.table.precluster(cfg.n_clusters, cfg.seed)
+                          if self.reuse_clustering else None)
+                sub = semantic_filter(self.table.embeddings, leaf.oracle,
+                                      cfg, precomputed_assign=assign,
+                                      subset_ids=rerun)
+                out[rerun] = sub.mask[rerun]
+            sp.set(n_out=int(out.sum()), n_replayed=int(len(replay)))
+            tr.metrics.inc("memo.replays")
+            tr.metrics.inc("memo.replayed_rows", int(len(replay)))
         fr = replay_result(out, n_input=len(live), n_replayed=len(replay),
-                           rerun=sub, total_time_s=time.time() - t0)
+                           rerun=sub, total_time_s=monotonic() - t0)
         if self.memo is not None:
             self.memo.record(leaf, cfg, fr, live)
         self._log_node(leaf, live, fr)

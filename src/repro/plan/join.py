@@ -27,7 +27,6 @@ share one predicate rate, the join analogue of a CSV cluster.  Each round:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -37,6 +36,8 @@ import numpy as np
 from repro.core import theory
 from repro.core.clustering import kmeans
 from repro.core.voting import vote_clusters
+from repro.obs.trace import get_tracer
+from repro.utils.timing import monotonic
 
 
 @dataclasses.dataclass
@@ -93,7 +94,7 @@ class JoinResult:
     n_fallback: int   # pairs decided by direct oracle fallback
     refine_rounds: int
     total_time_s: float
-    round_log: list
+    round_log: list = dataclasses.field(default_factory=list)
 
     @property
     def pairs(self) -> np.ndarray:
@@ -145,7 +146,8 @@ def sem_join(emb_left: np.ndarray, emb_right: np.ndarray, oracle,
     labels, or a ModelOracle whose prompt renders both tuple texts.
     """
     cfg = cfg or JoinConfig()
-    t0 = time.time()
+    tr = get_tracer()
+    t0 = monotonic()
     rng = np.random.default_rng(cfg.seed)
     el = np.asarray(emb_left, np.float32)
     er = np.asarray(emb_right, np.float32)
@@ -168,93 +170,114 @@ def sem_join(emb_left: np.ndarray, emb_right: np.ndarray, oracle,
     round_log: list = []
     depth = 0
     while blocks:
-        # ---- plan: sample still-undecided pairs in every block ----
-        plans = []
-        for b in blocks:
-            undec = np.nonzero(~decided[np.ix_(b.left, b.right)].ravel())[0]
-            if len(undec) == 0:
-                continue
-            n_s = theory.choose_sample_size(len(undec), cfg.xi, cfg.min_sample)
-            pick = rng.choice(len(undec), size=n_s, replace=False)
-            flat = undec[pick]
-            rest = np.setdiff1d(undec, flat, assume_unique=False)
-            li = b.left[flat // len(b.right)]
-            rj = b.right[flat % len(b.right)]
-            plans.append((b, li, rj, rest))
-        if not plans:
-            break
+        with tr.span("round", kind="round", depth=depth,
+                     n_blocks=len(blocks), executor="join") as rsp:
+            t_round = monotonic()
+            # ---- plan: sample still-undecided pairs in every block ----
+            with tr.span("plan", kind="plan"):
+                plans = []
+                for b in blocks:
+                    undec = np.nonzero(
+                        ~decided[np.ix_(b.left, b.right)].ravel())[0]
+                    if len(undec) == 0:
+                        continue
+                    n_s = theory.choose_sample_size(len(undec), cfg.xi,
+                                                    cfg.min_sample)
+                    pick = rng.choice(len(undec), size=n_s, replace=False)
+                    flat = undec[pick]
+                    rest = np.setdiff1d(undec, flat, assume_unique=False)
+                    li = b.left[flat // len(b.right)]
+                    rj = b.right[flat % len(b.right)]
+                    plans.append((b, li, rj, rest))
+            if not plans:
+                break
 
-        # ---- one cross-block oracle batch for the whole round ----
-        batch = np.concatenate([pair_ids(li, rj, nr)
-                                for (_, li, rj, _) in plans])
-        flat_labels = oracle(batch)
-        offsets = np.cumsum([len(li) for (_, li, rj, _) in plans])[:-1]
-        labels_by_block = np.split(flat_labels, offsets)
-        for (b, li, rj, _), lab in zip(plans, labels_by_block):
-            mask[li, rj] = lab
-            decided[li, rj] = True
-
-        # ---- one segmented voting dispatch over live blocks ----
-        live = [i for i, p in enumerate(plans) if len(p[3])]
-        rest_lr = {}
-        for i in live:
-            b, _, _, rest = plans[i]
-            rest_lr[i] = (b.left[rest // len(b.right)],
-                          b.right[rest % len(b.right)])
-        sim = cfg.vote == "sim"
-        votes = vote_clusters(
-            cfg.vote, [labels_by_block[i] for i in live],
-            [len(plans[i][3]) for i in live], lb, ub,
-            emb_unsampled=[_pair_embs(el, er, *rest_lr[i]) for i in live]
-            if sim else None,
-            emb_sampled=[_pair_embs(el, er, plans[i][1], plans[i][2])
-                         for i in live] if sim else None,
-            bandwidth=cfg.sim_bandwidth)
-
-        round_voted = n_undet = 0
-        undet_blocks = []
-        for pos, i in enumerate(live):
-            b = plans[i][0]
-            ri, rj = rest_lr[i]
-            vr = votes[pos]
-            tt, ff = vr.decided_true, vr.decided_false
-            mask[ri[tt], rj[tt]] = True
-            decided[ri[tt], rj[tt]] = True
-            decided[ri[ff], rj[ff]] = True
-            round_voted += len(tt) + len(ff)
-            if len(vr.undetermined):
-                n_undet += len(vr.undetermined)
-                undet_blocks.append(b)
-        n_voted += round_voted
-        round_log.append(JoinRound(
-            depth=depth, n_blocks=len(plans),
-            n_sampled=int(len(batch)), n_voted=round_voted,
-            n_undetermined=n_undet))
-
-        if not undet_blocks:
-            break
-        # ---- refine or fall back ----
-        depth += 1
-        blocks = []
-        for b in undet_blocks:
-            sub = ~decided[np.ix_(b.left, b.right)]
-            n_undec = int(sub.sum())
-            if depth > cfg.max_refine or n_undec <= cfg.min_sample:
-                ii, jj = np.nonzero(sub)
-                li, rj = b.left[ii], b.right[jj]
-                lab = oracle(pair_ids(li, rj, nr))
+            # ---- one cross-block oracle batch for the whole round ----
+            with tr.span("oracle", kind="oracle") as osp:
+                batch = np.concatenate([pair_ids(li, rj, nr)
+                                        for (_, li, rj, _) in plans])
+                flat_labels = oracle(batch)
+                osp.set(batch=int(len(batch)))
+            offsets = np.cumsum([len(li) for (_, li, rj, _) in plans])[:-1]
+            labels_by_block = np.split(flat_labels, offsets)
+            for (b, li, rj, _), lab in zip(plans, labels_by_block):
                 mask[li, rj] = lab
                 decided[li, rj] = True
-                n_fallback += len(li)
-            else:
-                blocks.extend(_split_block(b, el, er, cfg, depth))
+
+            # ---- one segmented voting dispatch over live blocks ----
+            with tr.span("vote", kind="vote", n_blocks=len(plans)):
+                live = [i for i, p in enumerate(plans) if len(p[3])]
+                rest_lr = {}
+                for i in live:
+                    b, _, _, rest = plans[i]
+                    rest_lr[i] = (b.left[rest // len(b.right)],
+                                  b.right[rest % len(b.right)])
+                sim = cfg.vote == "sim"
+                votes = vote_clusters(
+                    cfg.vote, [labels_by_block[i] for i in live],
+                    [len(plans[i][3]) for i in live], lb, ub,
+                    emb_unsampled=[_pair_embs(el, er, *rest_lr[i])
+                                   for i in live] if sim else None,
+                    emb_sampled=[_pair_embs(el, er, plans[i][1],
+                                            plans[i][2])
+                                 for i in live] if sim else None,
+                    bandwidth=cfg.sim_bandwidth)
+
+                round_voted = n_undet = 0
+                undet_blocks = []
+                for pos, i in enumerate(live):
+                    b = plans[i][0]
+                    ri, rj = rest_lr[i]
+                    vr = votes[pos]
+                    tt, ff = vr.decided_true, vr.decided_false
+                    mask[ri[tt], rj[tt]] = True
+                    decided[ri[tt], rj[tt]] = True
+                    decided[ri[ff], rj[ff]] = True
+                    round_voted += len(tt) + len(ff)
+                    if len(vr.undetermined):
+                        n_undet += len(vr.undetermined)
+                        undet_blocks.append(b)
+            n_voted += round_voted
+            round_log.append(JoinRound(
+                depth=depth, n_blocks=len(plans),
+                n_sampled=int(len(batch)), n_voted=round_voted,
+                n_undetermined=n_undet))
+            rsp.set(n_sampled=int(len(batch)), n_voted=round_voted,
+                    n_undetermined=n_undet)
+            tr.metrics.inc("driver.rounds")
+            tr.metrics.observe("round.wall_s", monotonic() - t_round)
+
+            if not undet_blocks:
+                break
+            # ---- refine or fall back ----
+            depth += 1
+            with tr.span("partition", kind="partition", depth=depth,
+                         n_blocks=len(undet_blocks)):
+                blocks = []
+                for b in undet_blocks:
+                    sub = ~decided[np.ix_(b.left, b.right)]
+                    n_undec = int(sub.sum())
+                    if depth > cfg.max_refine or n_undec <= cfg.min_sample:
+                        ii, jj = np.nonzero(sub)
+                        li, rj = b.left[ii], b.right[jj]
+                        lab = oracle(pair_ids(li, rj, nr))
+                        mask[li, rj] = lab
+                        decided[li, rj] = True
+                        n_fallback += len(li)
+                    else:
+                        blocks.extend(_split_block(b, el, er, cfg, depth))
 
     if not decided.all():
         raise RuntimeError(f"join left {int((~decided).sum())} pair(s) "
                            "undecided — refinement invariant violated")
     delta = oracle.stats.delta(before)
+    tr.metrics.inc("oracle.calls", delta.n_calls)
+    tr.metrics.inc("oracle.input_tokens", delta.input_tokens)
+    tr.metrics.inc("oracle.output_tokens", delta.output_tokens)
+    tr.metrics.inc("driver.voted", n_voted)
+    tr.metrics.inc("driver.fallback", n_fallback)
     return JoinResult(
         pair_mask=mask, n_llm_calls=delta.n_calls,
         input_tokens=delta.input_tokens, output_tokens=delta.output_tokens,
         n_voted=n_voted, n_fallback=n_fallback, refine_rounds=depth,
-        total_time_s=time.time() - t0, round_log=round_log)
+        total_time_s=monotonic() - t0, round_log=round_log)

@@ -40,7 +40,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Dict, List, Optional
@@ -50,8 +49,10 @@ import numpy as np
 from repro.api.memo import oracle_identity
 from repro.api.query import FilterQuery, JoinQuery
 from repro.core.oracle import AsyncOracleDispatcher, evaluate_packed
+from repro.obs.trace import get_tracer
 from repro.plan.expr import And, Expr, Not, Or, Pred
 from repro.serving.batcher import DispatchMergeStats
+from repro.utils.timing import monotonic
 
 
 class BatchingOracleProxy:
@@ -88,6 +89,10 @@ class _OracleRequest:
     oracle: object            # the UNWRAPPED oracle to evaluate with
     ids: np.ndarray
     future: Future
+    # the requester's innermost open span (its round-level oracle span),
+    # captured on the task thread at park time: the explicit cross-thread
+    # edge parenting the dispatch_wave span run on the FIFO lane thread
+    span: object = None
 
 
 class _Task:
@@ -172,6 +177,18 @@ class ServiceStats:
     n_deferred: int = 0          # tasks held back by an oracle conflict
     n_completed: int = 0
     n_failed: int = 0
+
+    def metrics_view(self) -> dict:
+        """Unified-name view for ``MetricsRegistry.sync_from`` (includes
+        the nested merge stats)."""
+        view = self.merge.metrics_view()
+        view.update({
+            "service.submitted": self.n_submitted,
+            "service.deferred": self.n_deferred,
+            "service.completed": self.n_completed,
+            "service.failed": self.n_failed,
+        })
+        return view
 
 
 def _map_leaves(expr: Expr, fn) -> Expr:
@@ -348,7 +365,8 @@ class QueryScheduler:
         """Proxy entry point: park the calling thread until the merged
         dispatch containing this batch resolves."""
         req = _OracleRequest(task=task, oracle=oracle,
-                             ids=np.asarray(ids), future=Future())
+                             ids=np.asarray(ids), future=Future(),
+                             span=get_tracer().current())
         with self._cv:
             task.pending.append(req)
             self._cv.notify_all()
@@ -386,16 +404,33 @@ class QueryScheduler:
         """Evaluate one packed wave on the dispatcher lane and unpark its
         requesters.  Runs strictly FIFO relative to other waves, so
         per-oracle evaluation order stays exactly submission order."""
-        t0 = time.perf_counter()
-        try:
-            outcomes, info = evaluate_packed(
-                [(r.oracle, r.ids) for r in wave], pack=self.pack)
-        except BaseException as e:  # defensive: never strand a waiter
-            outcomes, info = [e] * len(wave), {"tokens": 0, "truncated": 0}
+        tr = get_tracer()
+        t0 = monotonic()
+        # the wave runs on the lane thread; parent it to the first
+        # requester's captured span (the cross-thread edge) and list every
+        # member request's span id so all requesters stay correlated
+        with tr.span("dispatch_wave", kind="dispatch_wave",
+                     parent=wave[0].span,
+                     n_requests=len(wave),
+                     n_ids=int(sum(len(r.ids) for r in wave)),
+                     tasks=[r.task.label for r in wave],
+                     request_spans=[getattr(r.span, "span_id", None)
+                                    for r in wave]) as sp:
+            try:
+                outcomes, info = evaluate_packed(
+                    [(r.oracle, r.ids) for r in wave], pack=self.pack)
+            except BaseException as e:  # defensive: never strand a waiter
+                outcomes, info = [e] * len(wave), {"tokens": 0,
+                                                   "truncated": 0}
+            sp.set(tokens=info["tokens"], truncated=info["truncated"])
+        wall = monotonic() - t0
         self.stats.merge.record([len(r.ids) for r in wave],
-                                wall_s=time.perf_counter() - t0,
+                                wall_s=wall,
                                 tokens=info["tokens"],
                                 truncated=info["truncated"])
+        tr.metrics.inc("service.ticks")
+        tr.metrics.observe("service.wave_wall_s", wall)
+        tr.metrics.set("service.batch_fill", self.stats.merge.merge_factor)
         for r, out in zip(wave, outcomes):
             if isinstance(out, BaseException):
                 r.future.set_exception(out)

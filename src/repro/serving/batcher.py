@@ -80,6 +80,21 @@ class DispatchMergeStats:
             return 0.0
         return self.total_tokens / self.total_wall_s
 
+    def metrics_view(self) -> dict:
+        """Unified-name view for ``MetricsRegistry.sync_from``."""
+        return {
+            "service.invocations": self.n_invocations,
+            "service.requests": self.n_requests,
+            "service.merged_ids": self.total_ids,
+            "service.tokens": self.total_tokens,
+            "service.truncated": self.n_truncated,
+            "service.mean_batch_size": self.mean_batch_size,
+            "service.merge_factor": self.merge_factor,
+            "service.tokens_per_s": self.tokens_per_s,
+            "service.last_invocation": self.last_invocation,
+            "service.last_wall_s": self.last_wall_s,
+        }
+
 
 class BucketBatcher:
     def __init__(self, max_batch: int = 32, pad_id: int = 0,
@@ -107,6 +122,19 @@ class BucketBatcher:
     def fill_ratio(self) -> float:
         """Fraction of padded (batch x bucket_len) slots holding real tokens."""
         return self.stats["real_tokens"] / max(1, self.stats["padded_tokens"])
+
+    def metrics_view(self) -> dict:
+        """Unified-name view for ``MetricsRegistry.sync_from``."""
+        return {
+            "engine.plans": self.stats["plans"],
+            "engine.prompts": self.stats["prompts"],
+            "engine.batches": self.stats["batches"],
+            "engine.padded_tokens": self.stats["padded_tokens"],
+            "engine.real_tokens": self.stats["real_tokens"],
+            "engine.truncated_prompts": self.stats["truncated_prompts"],
+            "engine.truncated_tokens": self.stats["truncated_tokens"],
+            "engine.bucket_fill": self.fill_ratio,
+        }
 
     def plan(self, prompts: Sequence[List[int]]
              ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs.trace import get_tracer
 from repro.serving.batcher import BucketBatcher
 
 
@@ -88,23 +89,35 @@ class ServingEngine:
         n_tok = (self.cfg.padded_vocab if token_ids is None
                  else token_ids.shape[-1])
         out = np.zeros((len(prompts), n_tok), np.float32)
+        tr = get_tracer()
         for idx, toks, lens in self.batcher.plan(prompts):
-            if token_ids is None:
-                logits = self._prefill_fn(toks.shape[1], False)(
-                    self.params, jnp.asarray(toks))
-                last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
-            else:
-                tids = token_ids if token_ids.ndim == 1 else token_ids[idx]
-                last = np.asarray(self._select_fn(
-                    toks.shape[1], token_ids.ndim == 2)(
-                        self.params, jnp.asarray(toks), jnp.asarray(lens),
-                        jnp.asarray(tids)))
+            with tr.span("engine_tick", kind="engine_tick", phase="prefill",
+                         bucket_len=int(toks.shape[1]), batch=int(len(idx)),
+                         tokens=int(lens.sum()),
+                         attn_impl=self.cfg.attn_impl):
+                if token_ids is None:
+                    logits = self._prefill_fn(toks.shape[1], False)(
+                        self.params, jnp.asarray(toks))
+                    last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+                else:
+                    tids = (token_ids if token_ids.ndim == 1
+                            else token_ids[idx])
+                    last = np.asarray(self._select_fn(
+                        toks.shape[1], token_ids.ndim == 2)(
+                            self.params, jnp.asarray(toks),
+                            jnp.asarray(lens), jnp.asarray(tids)))
             out[idx] = last
             self.stats["prefill_tokens"] += int(lens.sum())
             self.stats["batches"] += 1
             self.stats["batched_prompts"] += int(len(idx))
             self.stats["batch_sizes"].append(int(len(idx)))
             del self.stats["batch_sizes"][:-self._BATCH_SIZE_WINDOW]
+            tr.metrics.inc("engine.prefill_tokens", int(lens.sum()))
+            tr.metrics.inc("engine.ticks")
+            tr.metrics.observe("engine.batch_size", int(len(idx)),
+                               bounds=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+        tr.metrics.set_info("kernel.attn_impl", self.cfg.attn_impl)
+        tr.metrics.set("engine.bucket_fill", self.batcher.fill_ratio)
         for k in ("truncated_prompts", "truncated_tokens"):
             self.stats[k] = self.batcher.stats[k]
         return out
@@ -120,24 +133,34 @@ class ServingEngine:
             self._decode_fn = jax.jit(self._decode)
         results: List[List[int]] = [[] for _ in prompts]
         key = jax.random.key(seed)
+        tr = get_tracer()
         for idx, toks, lens in self.batcher.plan(prompts):
             L = toks.shape[1]
-            logits, cache, _ = self._prefill_fn(L, True)(
-                self.params, jnp.asarray(toks))
-            # next_pos per sequence = its true length (cache rows beyond a
-            # prompt's length contain pad K/V — masked by per-seq pos)
-            pos = jnp.asarray(lens, jnp.int32)
-            last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
-            cur = jnp.asarray(self._sample(last, temperature, key))
-            for step in range(max_new):
-                for r, k in enumerate(idx):
-                    results[k].append(int(cur[r]))
-                logits_d, cache = self._decode_fn(self.params, cache, cur, pos)
-                pos = pos + 1
-                key, sub = jax.random.split(key)
-                cur = jnp.asarray(self._sample(np.asarray(logits_d),
-                                               temperature, sub))
-                self.stats["decode_tokens"] += len(idx)
+            with tr.span("engine_tick", kind="engine_tick", phase="generate",
+                         bucket_len=int(L), batch=int(len(idx)),
+                         tokens=int(lens.sum()), max_new=int(max_new),
+                         attn_impl=self.cfg.attn_impl):
+                logits, cache, _ = self._prefill_fn(L, True)(
+                    self.params, jnp.asarray(toks))
+                # next_pos per sequence = its true length (cache rows
+                # beyond a prompt's length contain pad K/V — masked by
+                # per-seq pos)
+                pos = jnp.asarray(lens, jnp.int32)
+                last = np.asarray(logits)[np.arange(len(idx)), lens - 1]
+                cur = jnp.asarray(self._sample(last, temperature, key))
+                for step in range(max_new):
+                    for r, k in enumerate(idx):
+                        results[k].append(int(cur[r]))
+                    logits_d, cache = self._decode_fn(self.params, cache,
+                                                      cur, pos)
+                    pos = pos + 1
+                    key, sub = jax.random.split(key)
+                    cur = jnp.asarray(self._sample(np.asarray(logits_d),
+                                                   temperature, sub))
+                    self.stats["decode_tokens"] += len(idx)
+            tr.metrics.inc("engine.prefill_tokens", int(lens.sum()))
+            tr.metrics.inc("engine.decode_tokens", int(max_new * len(idx)))
+            tr.metrics.inc("engine.ticks")
         for k in ("truncated_prompts", "truncated_tokens"):
             self.stats[k] = self.batcher.stats[k]
         return results

@@ -1,9 +1,24 @@
-"""Wall-clock timing helper for benches (block_until_ready aware)."""
+"""Timing helpers: the repo's single source of duration clocks.
+
+Every duration measurement in ``src/`` routes through ``monotonic()``
+(``time.perf_counter`` — monotonic, immune to wall-clock steps/NTP slews).
+``time.time`` is reserved for genuine wall-clock *timestamps* (checkpoint
+metadata, file names) and is lint-banned elsewhere (ruff TID251).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+
+
+def monotonic() -> float:
+    """Monotonic seconds for measuring durations (``t1 - t0``).
+
+    The value is only meaningful as a difference against another
+    ``monotonic()`` reading — never as a wall-clock date.
+    """
+    return time.perf_counter()
 
 
 class Timer:

@@ -1,0 +1,215 @@
+"""Unified tracing & metrics layer (ISSUE 7 acceptance criteria).
+
+Hard contracts:
+1. a traced scheduler run over concurrent queries produces spans nesting
+   query -> plan_node -> round -> {plan, oracle -> dispatch_wave, vote,
+   partition} with unique stable ids and resolvable parents (including
+   the explicit cross-thread dispatch_wave edge);
+2. tracing is observation-only: a run with the default NullTracer is
+   bit-identical (masks AND per-query oracle call counts) to the same
+   run under a recording Tracer;
+3. the Perfetto export is valid Chrome trace-event JSON whose slices
+   preserve the span hierarchy;
+4. histograms are bounded: 10k observations grow no state beyond the
+   fixed bucket counts;
+5. legacy stats objects surface through ``MetricsRegistry.sync_from``
+   under the unified naming scheme;
+6. result ``round_log``s are per-run (the mutable-default regression).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.obs import (DEFAULT_BOUNDS, Histogram, MetricsRegistry, Tracer,
+                       get_tracer, registry_to_prometheus, spans_to_perfetto,
+                       use_tracer, write_run_profile)
+
+N = 600
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _oracle(ds, q="RV-Q1", flip=0.02, seed=7):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=seed,
+                           token_lens=ds.token_lens)
+
+
+def _run_concurrent(ds):
+    """3 concurrent queries (2 leaves + 1 cascade) through the scheduler."""
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    qs = [t.filter(_oracle(ds, "RV-Q1"), name="A"),
+          t.filter(_oracle(ds, "RV-Q3"), name="B"),
+          t.filter(_oracle(ds, "RV-Q1", seed=11), name="C")
+          & t.filter(_oracle(ds, "RV-Q3", seed=12), name="D")]
+    with sess.scheduler.holding():
+        tickets = [sess.submit(q) for q in qs]
+    return sess.gather(*tickets)
+
+
+@pytest.fixture(scope="module")
+def traced(ds):
+    tr = Tracer(metrics=MetricsRegistry())
+    with use_tracer(tr):
+        results = _run_concurrent(ds)
+    return tr, results
+
+
+# ------------------------------------------------------- span structure
+def test_span_ids_unique_and_parents_resolve(traced):
+    tr, _ = traced
+    spans = tr.spans()
+    ids = [s.span_id for s in spans]
+    assert len(ids) == len(set(ids))
+    by_id = {s.span_id: s for s in spans}
+    for s in spans:
+        assert s.parent_id is None or s.parent_id in by_id
+        assert s.t1 is not None and s.t1 >= s.t0
+
+
+def test_spans_nest_query_to_dispatch_wave(traced):
+    tr, _ = traced
+    spans = tr.spans()
+    by_id = {s.span_id: s for s in spans}
+
+    def chain(s):
+        kinds = []
+        while s is not None:
+            kinds.append(s.kind)
+            s = by_id.get(s.parent_id)
+        return tuple(reversed(kinds))
+
+    kinds = {s.kind for s in spans}
+    assert {"query", "plan_node", "round", "plan", "oracle", "vote",
+            "dispatch_wave"} <= kinds
+    # 3 submitted queries -> 3 query roots, each a root span
+    roots = [s for s in spans if s.kind == "query"]
+    assert len(roots) == 3 and all(s.parent_id is None for s in roots)
+    # every dispatch_wave hangs off an oracle span inside a round of a
+    # plan_node of a query — the full ISSUE-7 chain, crossing from the
+    # task thread to the dispatch lane thread via the explicit edge
+    waves = [s for s in spans if s.kind == "dispatch_wave"]
+    assert waves
+    for w in waves:
+        assert chain(w) == ("query", "plan_node", "round", "oracle",
+                            "dispatch_wave")
+    # rounds carry executor + counters once closed
+    rounds = [s for s in spans if s.kind == "round"]
+    assert all("n_sampled" in r.attrs for r in rounds)
+
+
+def test_metrics_registry_unified_names(traced, ds):
+    tr, results = traced
+    snap = tr.metrics.snapshot()
+    assert snap["oracle.calls"] == sum(r.n_llm_calls for r in results)
+    assert snap["query.collects"] == 3
+    assert snap["driver.rounds"] >= 1
+    assert snap["round.wall_s"]["count"] == snap["driver.rounds"]
+    assert snap["service.ticks"] >= 1
+    prom = registry_to_prometheus(tr.metrics)
+    assert "oracle_calls" in prom and "service_wave_wall_s_bucket" in prom
+
+
+def test_profile_reports_est_vs_observed(traced):
+    _, results = traced
+    txt = results[2].profile()
+    assert "QueryProfile" in txt
+    for name in ("C", "D"):
+        assert any(ln.strip().startswith(name) for ln in txt.splitlines())
+    assert "est" in txt and "sel=" in txt
+
+
+# ------------------------------------------------ observation-only check
+def test_disabled_tracer_bit_identical(ds, traced):
+    _, with_trace = traced
+    assert not get_tracer().enabled  # default NullTracer outside use_tracer
+    plain = _run_concurrent(ds)
+    for a, b in zip(plain, with_trace):
+        np.testing.assert_array_equal(a.mask, b.mask)
+        assert a.n_llm_calls == b.n_llm_calls
+        assert a.n_replayed == b.n_replayed
+
+
+# ------------------------------------------------------------- exporters
+def test_perfetto_export_valid_json(traced, tmp_path):
+    tr, _ = traced
+    doc = json.loads(json.dumps(spans_to_perfetto(tr.spans(), tr.epoch_mono)))
+    slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(slices) == len(tr.spans())
+    for e in slices:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        assert {"pid", "tid", "name", "cat"} <= e.keys()
+    # thread metadata events name every referenced track
+    named = {e["tid"] for e in doc["traceEvents"] if e["ph"] == "M"}
+    assert {e["tid"] for e in slices} <= named
+    files = write_run_profile(tmp_path, tr, tr.metrics)
+    for f in ("spans.jsonl", "trace.json", "ticks.jsonl", "metrics.prom",
+              "metrics.json"):
+        assert (tmp_path / f).stat().st_size > 0
+    assert int(files["ticks"]) >= 1
+
+
+# ------------------------------------------------------ bounded histogram
+def test_histogram_memory_bounded_under_10k():
+    h = Histogram("test.wall_s", bounds=DEFAULT_BOUNDS)
+    n_buckets = len(h.counts)
+    rng = np.random.default_rng(0)
+    for x in rng.exponential(0.1, size=10_000):
+        h.observe(float(x))
+    assert h.count == 10_000
+    assert len(h.counts) == n_buckets          # no per-sample state
+    assert sum(h.counts) == 10_000
+    assert h.min <= h.mean <= h.max
+
+
+def test_sync_from_legacy_stats():
+    from repro.core.oracle import OracleStats
+    from repro.serving.batcher import DispatchMergeStats
+    st = OracleStats()
+    st.n_calls, st.input_tokens, st.output_tokens = 42, 1000, 42
+    dm = DispatchMergeStats()
+    dm.record([8, 8], wall_s=0.5, tokens=640)
+    reg = MetricsRegistry()
+    reg.sync_from(st, dm)
+    snap = reg.snapshot()
+    assert snap["oracle.calls"] == 42
+    assert snap["oracle.input_tokens"] == 1000
+    assert snap["service.merged_ids"] == 16
+    assert snap["service.merge_factor"] == 2.0
+    # sync is idempotent — counters SET to the view, not re-added
+    reg.sync_from(st, dm)
+    assert reg.snapshot()["oracle.calls"] == 42
+
+
+# ------------------------------------- mutable-default round_log regression
+def test_round_logs_not_shared_between_runs(ds):
+    from repro.core.csv_filter import FilterResult
+    from repro.plan.join import JoinResult
+    kw = dict(n_llm_calls=0, input_tokens=0, output_tokens=0, n_voted=0,
+              n_fallback=0, total_time_s=0.0)
+    f1 = FilterResult(mask=np.zeros(1, bool), recluster_rounds=0,
+                      recluster_time_s=0.0, cluster_log=[], xi_used=0.0, **kw)
+    f2 = FilterResult(mask=np.zeros(1, bool), recluster_rounds=0,
+                      recluster_time_s=0.0, cluster_log=[], xi_used=0.0, **kw)
+    j1 = JoinResult(pair_mask=np.zeros((1, 1), bool), refine_rounds=0, **kw)
+    j2 = JoinResult(pair_mask=np.zeros((1, 1), bool), refine_rounds=0, **kw)
+    for a, b in ((f1, f2), (j1, j2)):
+        a.round_log.append("sentinel")
+        assert b.round_log == []
+        assert a.round_log is not b.round_log
+    # end-to-end: two back-to-back driver runs keep disjoint logs
+    from repro.core import CSVConfig, SemanticTable
+    t = SemanticTable(texts=[""] * 200, embeddings=ds.embeddings[:200])
+    cfg = CSVConfig(n_clusters=4)
+    r1 = t.sem_filter(_oracle(ds), cfg=cfg)
+    r2 = t.sem_filter(_oracle(ds), cfg=cfg)
+    assert r1.round_log is not r2.round_log
+    assert r1.oracle_batch_sizes is not r2.oracle_batch_sizes
