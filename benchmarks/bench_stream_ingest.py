@@ -1,0 +1,125 @@
+"""Stream ingestion: standing-query ticks vs full re-filtering per tick.
+
+Workload: one deterministic synthetic stream (the Fig. 4 imdb rows
+arriving in fixed per-tick batches) watched by two standing queries
+through ``repro.stream.StreamWatcher`` — every tick coalesced-appends the
+arrivals and re-votes only the touched clusters, pushing newly-matching
+rows to an in-memory sink.  The control re-filters the whole table from
+scratch at every tick with a fresh session (what a linear-invocation
+deployment without standing queries would pay).
+
+Asserted (the ISSUE-8 acceptance criteria):
+- per-tick oracle cost is sublinear: the incremental run's total is
+  < 0.5x the per-tick-refilter control's total;
+- steady-state ticks pay for their own rows, not the table;
+- sinks receive exactly the final matching row set, zero duplicates.
+
+Emitted: total incremental vs control oracle calls (the CI perf gate
+compares these against benchmarks/baseline.json) and per-tick means.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.data import make_dataset
+from repro.stream import CallbackSink, RateBudget, StreamWatcher, SyntheticSource
+
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+QUERIES = [("q0_pos", "RV-Q1", 7), ("q1_act", "RV-Q3", 8)]
+
+
+def _oracles(ds):
+    return {name: SyntheticOracle(ds.labels[key], flip_prob=0.0, seed=seed,
+                                  token_lens=ds.token_lens)
+            for name, key, seed in QUERIES}
+
+
+def main(small: bool = False):
+    n = 600 if small else 3000
+    per_tick = 60 if small else 150
+    ds = make_dataset("imdb_review", n=n, seed=0)
+
+    # ---- incremental: standing queries over the stream -----------------
+    sess = Session(policy=POL)
+    for name, oracle in _oracles(ds).items():
+        sess.register_oracle(name, oracle)
+    watcher = StreamWatcher(sess, table_name="feed")
+    watcher.add_source(
+        SyntheticSource("feed0", texts=list(ds.texts),
+                        embeddings=ds.embeddings,
+                        arrive_per_tick=per_tick, seed=3),
+        RateBudget(rows_per_tick=per_tick))
+    events = {name: [] for name, _, _ in QUERIES}
+    for name, _, _ in QUERIES:
+        watcher.register(name, sink=CallbackSink(
+            (lambda L: lambda ev: L.append(ev))(events[name])))
+    t0 = time.time()
+    summaries = watcher.run()
+    inc_wall = time.time() - t0
+    inc_calls = [s["oracle_calls"] for s in summaries]
+    inc_total = sum(inc_calls)
+    tokens = sum(sess.oracle(name).stats.input_tokens
+                 + sess.oracle(name).stats.output_tokens
+                 for name, _, _ in QUERIES)
+    n_ticks = len(summaries)
+    # steady state: a tick pays for its own rows across both queries
+    assert all(c <= per_tick * len(QUERIES) for c in inc_calls[1:]), inc_calls
+    # delivery contract: zero duplicate notifications, and every row the
+    # final filter matches was notified once per distinct content (the
+    # delta engine dedups content-identical rows).  Rows whose undecided
+    # cluster vote flips as clusters grow may be notified then drop out of
+    # the final mask — approximation noise, bounded tightly.
+    from repro.stream.delta import row_key
+    final = {name: sess["feed"].filter(name).collect() for name, _, _ in QUERIES}
+    for name, _, _ in QUERIES:
+        rows = [e["row"] for e in events[name]]
+        assert len(rows) == len(set(rows)), f"{name}: duplicate notification"
+        keys = set(e["key"] for e in events[name])
+        final_rows = [int(i) for i in final[name].mask.nonzero()[0]]
+        silent = [i for i in final_rows if row_key(ds.texts[i], None) not in keys]
+        assert not silent, f"{name}: {len(silent)} matches never notified"
+        extra = set(rows) - set(final_rows)
+        assert len(extra) <= max(2, 0.05 * len(rows)), \
+            f"{name}: {len(extra)} vote-flip notifications beyond bound"
+    sess.close()
+
+    # ---- control: re-filter the whole prefix from scratch every tick ---
+    t0 = time.time()
+    full_total = 0
+    for t in range(1, n_ticks + 1):
+        n_t = min(n, per_tick * t)
+        ctl = Session(policy=POL)
+        for name, oracle in _oracles(ds).items():
+            ctl.register_oracle(name, oracle)
+        h = ctl.table(embeddings=ds.embeddings[:n_t], name="feed")
+        full_total += sum(h.filter(name).collect().n_llm_calls
+                          for name, _, _ in QUERIES)
+        ctl.close()
+    full_wall = time.time() - t0
+    assert inc_total < 0.5 * full_total, (
+        f"incremental {inc_total} calls not sublinear vs per-tick "
+        f"re-filter {full_total}")
+
+    n_notified = sum(len(v) for v in events.values())
+    emit("stream/imdb/incremental", inc_wall / max(1, inc_total) * 1e6,
+         f"oracle={inc_total};ticks={n_ticks};rows={n};"
+         f"mean_per_tick={inc_total / max(1, n_ticks):.0f};"
+         f"notified={n_notified};wall={inc_wall:.2f}s")
+    emit("stream/imdb/full_refilter", full_wall / max(1, full_total) * 1e6,
+         f"oracle={full_total};ticks={n_ticks};"
+         f"mean_per_tick={full_total / max(1, n_ticks):.0f};"
+         f"ratio={full_total / max(1, inc_total):.1f}x;wall={full_wall:.2f}s")
+    return [("imdb_review", "incremental",
+             {"oracle_calls": int(inc_total), "tokens": int(tokens)}),
+            ("imdb_review", "full_refilter",
+             {"oracle_calls": int(full_total), "tokens": 0})]
+
+
+if __name__ == "__main__":
+    main(small=True)

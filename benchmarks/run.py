@@ -35,21 +35,33 @@ def _service_cases(rows) -> dict:
     } for ds_name, label, out in rows}
 
 
+def _stream_cases(rows) -> dict:
+    """bench_stream_ingest rows -> ``stream/<ds>/<label>`` entries: total
+    oracle calls of the standing-query run and its per-tick-refilter
+    control (gating the incremental case keeps the dirty-cluster append
+    path sublinear)."""
+    return {f"stream/{ds_name}/{label}": {
+        "oracle_calls": int(out["oracle_calls"]),
+        "proxy_calls": 0,
+        "tokens": int(out["tokens"]),
+    } for ds_name, label, out in rows}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale dataset sizes (slow on 1 CPU core)")
     ap.add_argument("--quick", action="store_true",
-                    help="perf-smoke mode: only the Fig. 4 small cases and "
-                         "the service-throughput workload (the CI perf "
-                         "gate; implies small sizes)")
+                    help="perf-smoke mode: only the Fig. 4 small cases, the "
+                         "service-throughput workload, and the stream-ingest "
+                         "workload (the CI perf gate; implies small sizes)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the Fig. 4 / service call counters as JSON "
                          "(see benchmarks/check_regression.py)")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
                          "fig6,appb,kernels,roofline,plan_order,api_overhead,"
-                         "session_reuse,service")
+                         "session_reuse,service,stream")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
@@ -59,11 +71,11 @@ def main() -> None:
         # api_overhead rides along for its internal contracts (traced vs
         # untraced bit-identity + <5% tracer overhead); it contributes no
         # JSON cases — wall-clock is not a deterministic gate signal
-        quick_suites = {"fig4", "service", "api_overhead"}
+        quick_suites = {"fig4", "service", "stream", "api_overhead"}
         only = quick_suites if only is None else (only & quick_suites)
         if not only:
             # an empty set is falsy and would disable filtering entirely
-            ap.error("--quick runs only the fig4/service/api_overhead "
+            ap.error("--quick runs only the fig4/service/stream/api_overhead "
                      "suites; the given --only list excludes all of them")
 
     from benchmarks import (bench_fig2_distance, bench_fig4_efficiency,
@@ -72,7 +84,8 @@ def main() -> None:
                             bench_fig6_synthetic, bench_appb_backbones,
                             bench_kernels, bench_plan_order,
                             bench_api_overhead, bench_session_reuse,
-                            bench_service_throughput, roofline_report)
+                            bench_service_throughput, bench_stream_ingest,
+                            roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
@@ -83,6 +96,7 @@ def main() -> None:
         ("api_overhead", bench_api_overhead),
         ("session_reuse", bench_session_reuse),
         ("service", bench_service_throughput),
+        ("stream", bench_stream_ingest),
         ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")
@@ -98,6 +112,8 @@ def main() -> None:
                 json_cases.update(_fig4_cases(ret))
             if name == "service" and ret:
                 json_cases.update(_service_cases(ret))
+            if name == "stream" and ret:
+                json_cases.update(_stream_cases(ret))
             print(f"# suite {name} done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # keep the harness running

@@ -111,6 +111,7 @@ class ReplayHit:
     mask: np.ndarray
     replay_rows: np.ndarray
     rerun_rows: np.ndarray
+    n_dirty_clusters: int = 0    # clusters whose members rerun (metrics)
 
     @property
     def full(self) -> bool:
@@ -282,8 +283,12 @@ class ReuseView:
             # a clean cluster contains a row newer than the memo — the dirty
             # bookkeeping was bypassed; fall back to a cold run
             return None
+        # the executor incs memo.dirty_clusters when it consumes the hit —
+        # planning probes call lookup() too and must not double-count
         return ReplayHit(mask=dm.mask, replay_rows=replay_rows,
-                         rerun_rows=np.nonzero(~clean)[0])
+                         rerun_rows=np.nonzero(~clean)[0],
+                         n_dirty_clusters=int(
+                             (dirty_version > dm.version).sum()))
 
     def record(self, leaf: Pred, cfg: CSVConfig, fr: FilterResult,
                live: np.ndarray) -> None:

@@ -20,8 +20,9 @@ the ``PlanExecutor`` table protocol (``embeddings``, ``precluster``,
 """
 from __future__ import annotations
 
+import contextlib
 import threading
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,6 +32,7 @@ from repro.api.query import FilterQuery, JoinQuery
 from repro.core.oracle import OracleStats
 from repro.core.operators import SemanticTable
 from repro.embeddings.cache import CachingEmbedder, EmbeddingCache
+from repro.obs.trace import get_tracer
 from repro.plan.expr import Expr, Pred
 
 
@@ -53,6 +55,9 @@ class TableHandle:
         self._table = table
         self.version = 0
         self._dirty: Dict[Tuple[int, int], np.ndarray] = {}
+        # micro-batch ingestion buffer: non-None while inside a
+        # ``coalescing_appends()`` block (list of (texts, embeddings))
+        self._append_buffer: Optional[List[tuple]] = None
 
     def __len__(self) -> int:
         return len(self._table)
@@ -118,14 +123,82 @@ class TableHandle:
         n_new = len(texts) if texts is not None else len(embeddings)
         if n_new == 0:
             return self  # no rows: don't bump the version for a no-op
+        if self._append_buffer is not None:
+            # micro-batch mode: park the rows; one _append_rows call (one
+            # precluster patch, one dirty-set union, one version bump)
+            # happens at coalescing_appends() exit.  Embedding resolution
+            # is deferred too, so buffered text rows still embed through
+            # the session cache exactly as the per-append path would.
+            self._append_buffer.append(
+                (list(texts) if texts is not None else None,
+                 np.asarray(embeddings, np.float32)
+                 if embeddings is not None else None))
+            return self
         new_emb = self._resolve_embeddings(texts, embeddings)
         touched = self._table._append_rows(
             list(texts) if texts is not None else None, new_emb)
         self.version += 1
         self._apply_touched(touched)
+        get_tracer().metrics.inc("session.append_rows", n_new)
         # growing a table reindexes pair ids of joins against it
         self.session._clear_pair_oracles(self.name)
         return self
+
+    @contextlib.contextmanager
+    def coalescing_appends(self):
+        """Micro-batch ingestion: coalesce every ``append()`` inside the
+        block into ONE table mutation at exit.
+
+        High-frequency small appends (a stream tick draining several
+        sources) pay one nearest-centroid precluster patch, one dirty-set
+        union, and one version bump instead of one of each per call.
+        Bit-identity to the per-append path: centroids do not move during
+        a patch, so per-row nearest-centroid assignment is independent of
+        batch composition, and the rerun set of a later memoized collect —
+        members of clusters dirtied since the memo's version — is exactly
+        the union the per-append path would dirty (asserted in
+        tests/test_stream.py).  Reads inside the block (``len``,
+        ``embeddings``, ``collect``) see the PRE-append table; reentrant
+        blocks coalesce into the outermost one.
+        """
+        if self._append_buffer is not None:
+            yield self   # nested: the outermost block owns the flush
+            return
+        self._append_buffer = []
+        try:
+            yield self
+        finally:
+            buf, self._append_buffer = self._append_buffer, None
+            self._flush_appends(buf)
+
+    def _flush_appends(self, buf: List[tuple]) -> None:
+        """Apply buffered appends as one mutation (see coalescing_appends)."""
+        if not buf:
+            return
+        has_texts = [t is not None for t, _ in buf]
+        if any(has_texts) != all(has_texts):
+            raise ValueError(
+                "coalesced appends mix texts= and embeddings-only rows; "
+                "a single micro-batch must use one form")
+        texts: Optional[List[str]] = None
+        if all(has_texts):
+            texts = [s for t, _ in buf for s in t]
+        # resolve each buffered batch exactly as append() would have (given
+        # embeddings win; text rows embed through the session cache), then
+        # concatenate into one patch
+        embs = [self._resolve_embeddings(t, e) for t, e in buf]
+        if any(e is None for e in embs) != all(e is None for e in embs):
+            raise ValueError(
+                "coalesced appends mix lazy-embedding and materialized "
+                "rows; a single micro-batch must use one form")
+        new_emb = (np.concatenate(embs)
+                   if embs[0] is not None else None)
+        touched = self._table._append_rows(texts, new_emb)
+        self.version += 1
+        self._apply_touched(touched)
+        n_new = len(texts) if texts is not None else len(new_emb)
+        get_tracer().metrics.inc("session.append_rows", n_new)
+        self.session._clear_pair_oracles(self.name)
 
     def update(self, ids, texts: Optional[Sequence[str]] = None,
                embeddings=None) -> "TableHandle":

@@ -88,6 +88,7 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
     """K predicates through the concurrent service over one engine."""
     from repro.api import ExecutionPolicy, Session
     from repro.service import FilterService
+    from repro.service.lifecycle import GracefulShutdown
 
     preds = (SERVICE_PREDICATES * ((k - 1) // len(SERVICE_PREDICATES) + 1))[:k]
     sess = Session(policy=ExecutionPolicy(n_clusters=4, min_sample=25,
@@ -100,6 +101,12 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
     if service.store.exists():
         print(f"[serve] restore: {service.restore()}")
     service.register_tenant("default", sess.policy)
+    # exit-mode shutdown: SIGINT/SIGTERM writes a final session checkpoint
+    # (best-effort mid-run — whatever rounds completed are memoized and
+    # replay on restart) before exiting 128+signum; the normal path fires
+    # the same once-only checkpoint via shutdown.close() below
+    shutdown = GracefulShutdown(exit_on_signal=True).install()
+    shutdown.register("service-checkpoint", service.checkpoint)
     with sess.scheduler.holding():
         tickets = [service.submit("default", table.filter(f"p{i}"),
                                   label=f"p{i}") for i in range(k)]
@@ -117,7 +124,7 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
           f"engine mean batch {engine.mean_batch_size:.1f}, "
           f"bucket fill {engine.batcher.fill_ratio:.2f}, "
           f"truncated prompts {merge.n_truncated}")
-    service.checkpoint()
+    shutdown.close()   # final checkpoint (once) + restore signal handlers
     print(f"[serve] session checkpointed to {state_dir} — rerun to replay "
           "at 0 LLM calls")
     service.close()

@@ -290,6 +290,8 @@ class PlanExecutor:
             sp.set(n_out=int(out.sum()), n_replayed=int(len(replay)))
             tr.metrics.inc("memo.replays")
             tr.metrics.inc("memo.replayed_rows", int(len(replay)))
+            tr.metrics.inc("memo.dirty_clusters",
+                           int(getattr(hit, "n_dirty_clusters", 0)))
         fr = replay_result(out, n_input=len(live), n_replayed=len(replay),
                            rerun=sub, total_time_s=monotonic() - t0)
         if self.memo is not None:

@@ -177,6 +177,7 @@ class ServiceStats:
     n_deferred: int = 0          # tasks held back by an oracle conflict
     n_completed: int = 0
     n_failed: int = 0
+    n_dispatch_ticks: int = 0    # barrier ticks that drained a batch
 
     def metrics_view(self) -> dict:
         """Unified-name view for ``MetricsRegistry.sync_from`` (includes
@@ -187,6 +188,7 @@ class ServiceStats:
             "service.deferred": self.n_deferred,
             "service.completed": self.n_completed,
             "service.failed": self.n_failed,
+            "service.dispatch_ticks": self.n_dispatch_ticks,
         })
         return view
 
@@ -232,6 +234,13 @@ class QueryScheduler:
         # pack=False keeps per-oracle engine dispatch (benchmark control)
         self.pack = pack
         self._cv = threading.Condition()
+        # observable idle flag: set while the scheduler has NO queries in
+        # flight or deferred.  The loop thread parks on the condition (via
+        # ``wait_for``) the whole time this is set — an idle scheduler
+        # performs zero dispatch work (asserted in tests/test_stream.py),
+        # which matters for an always-on stream watcher between ticks.
+        self.idle = threading.Event()
+        self.idle.set()
         self._running: List[_Task] = []
         self._deferred: List[_Task] = []
         self._tickets: List[QueryTicket] = []
@@ -267,6 +276,7 @@ class QueryScheduler:
         ticket = QueryTicket(self, task)
         with self._cv:
             self.stats.n_submitted += 1
+            self.idle.clear()
             self._tickets.append(ticket)
             blockers = set()
             for t in self._running + self._deferred:
@@ -342,6 +352,8 @@ class QueryScheduler:
                 else:
                     self.stats.n_completed += 1
                 self._release_deferred_locked()
+                if not self._running and not self._deferred:
+                    self.idle.set()
                 self._cv.notify_all()
 
     def _release_deferred_locked(self) -> None:
@@ -372,17 +384,29 @@ class QueryScheduler:
             self._cv.notify_all()
         return req.future.result()
 
+    def _barrier_ready_locked(self) -> bool:
+        """``wait_for`` predicate for the loop thread (call under _cv).
+        True when the loop has something to do: shut down, or dispatch a
+        full barrier tick.  While idle the thread blocks in ``_cv.wait``
+        inside ``wait_for`` — it burns no CPU and ticks no dispatch work
+        until a submit/park/close notifies the condition."""
+        if self._closed and not self._running and not self._deferred:
+            return True
+        if (self._hold == 0 and self._running
+                and all(t.pending for t in self._running)):
+            return True
+        if not self._running and not self._deferred:
+            self.idle.set()
+        return False
+
     def _loop(self) -> None:
         while True:
             with self._cv:
-                while True:
-                    if (self._closed and not self._running
-                            and not self._deferred):
-                        return
-                    if (self._hold == 0 and self._running
-                            and all(t.pending for t in self._running)):
-                        break
-                    self._cv.wait()
+                self._cv.wait_for(self._barrier_ready_locked)
+                if (self._closed and not self._running
+                        and not self._deferred):
+                    return
+                self.stats.n_dispatch_ticks += 1
                 batch: List[_OracleRequest] = []
                 for t in sorted(self._running, key=lambda t: t.index):
                     while t.pending:

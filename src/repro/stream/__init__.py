@@ -1,0 +1,24 @@
+"""Standing semantic queries over live streams (docs/streaming.md).
+
+Continuous ingestion (``StreamSource`` + ``RateBudget``), incremental
+evaluation of registered predicates via dirty-cluster re-votes
+(``StandingQuery`` inside a ``StreamWatcher``), newly-matching-row deltas
+with content dedup (``DeltaTracker``), and pluggable notification sinks
+with retry + dead-letter (``SinkRunner``).  Checkpoint/restore rides on
+``repro.service.store.SessionStore``.
+"""
+from repro.stream.delta import DeltaTracker, row_key
+from repro.stream.sinks import (CallbackSink, JsonlSink, Sink, SinkRunner,
+                                SinkStats, StdoutSink)
+from repro.stream.source import (RateBudget, ReplayFileSource, StreamRow,
+                                 StreamSource, SyntheticSource)
+from repro.stream.watcher import StandingQuery, StreamStats, StreamWatcher
+
+__all__ = [
+    "DeltaTracker", "row_key",
+    "CallbackSink", "JsonlSink", "Sink", "SinkRunner", "SinkStats",
+    "StdoutSink",
+    "RateBudget", "ReplayFileSource", "StreamRow", "StreamSource",
+    "SyntheticSource",
+    "StandingQuery", "StreamStats", "StreamWatcher",
+]

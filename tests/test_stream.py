@@ -1,0 +1,403 @@
+"""Standing semantic queries over live streams (ISSUE 8 acceptance).
+
+Hard contracts:
+1. micro-batch ingestion: ``coalescing_appends()`` produces masks and
+   call counts bit-identical to the per-append path while paying ONE
+   version bump / dirty-set union per batch;
+2. an idle ``QueryScheduler`` performs no dispatch work (the loop parks
+   on its condition; ``stats.n_dispatch_ticks`` stays 0);
+3. per-source rate budgets DEFER over-quota rows to later ticks, never
+   drop them;
+4. the delta engine notifies exactly the newly-matching rows once per
+   (query, content) — duplicates and True->False->True flips of equal
+   content are deduped, sink failures retry then dead-letter without
+   re-notification;
+5. graceful shutdown (in-process handler trigger) runs each cleanup
+   exactly once and leaves a restorable checkpoint + flushed sinks;
+6. a watcher killed after tick k and restored replays at ~0 oracle
+   calls and notifies ticks k+1..n exactly as an unkilled control — zero
+   duplicate notifications across the kill/restart;
+7. per-tick oracle cost is sublinear vs re-filtering the whole table
+   each tick, and the stream/sink/session counters surface under the
+   unified metric names.
+"""
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.obs import MetricsRegistry, Tracer, use_tracer
+from repro.service import SessionStore
+from repro.service.lifecycle import GracefulShutdown
+from repro.stream import (CallbackSink, DeltaTracker, JsonlSink, RateBudget,
+                          SinkRunner, StreamWatcher, SyntheticSource)
+
+N = 600
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _blobs(n_per=150, k=4, seed=0):
+    """k well-separated clusters: k-means recovers them exactly, so the
+    dirty-cluster arithmetic is deterministic (same as test_service)."""
+    rng = np.random.default_rng(seed)
+    centers = np.eye(k, k, dtype=np.float32) * 10.0
+    emb = np.concatenate([
+        centers[i] + rng.normal(0, 0.5, (n_per, k)).astype(np.float32)
+        for i in range(k)])
+    labels = np.concatenate([np.full(n_per, bool(i % 2 == 0))
+                             for i in range(k)])
+    return centers, emb, labels
+
+
+def _watcher(ds, state_dir, n_queries=2, arrive=60, quota=60,
+             checkpoint_every=None, use_scheduler=True):
+    """Session + watcher over one deterministic synthetic stream, with
+    CallbackSinks collecting events per query."""
+    sess = Session(policy=POL)
+    keys = ["RV-Q1", "RV-Q2", "RV-Q3"]
+    for i in range(n_queries):
+        sess.register_oracle(f"p{i}", SyntheticOracle(
+            ds.labels[keys[i % 3]], flip_prob=0.0, seed=7 + i,
+            token_lens=ds.token_lens))
+    store = SessionStore(state_dir) if state_dir is not None else None
+    w = StreamWatcher(sess, table_name="feed", store=store,
+                      checkpoint_every=checkpoint_every,
+                      use_scheduler=use_scheduler)
+    w.add_source(SyntheticSource("s0", texts=list(ds.texts),
+                                 embeddings=ds.embeddings,
+                                 arrive_per_tick=arrive, seed=3),
+                 RateBudget(rows_per_tick=quota))
+    events = {}
+    for i in range(n_queries):
+        lst = events.setdefault(f"p{i}", [])
+        w.register(f"p{i}", sink=CallbackSink(
+            (lambda L: lambda ev: L.append(ev))(lst)))
+    return sess, w, events
+
+
+# ------------------------------------------- 1. coalesced micro-batches
+def test_coalesced_appends_bit_identical_to_per_append():
+    centers, emb, labels = _blobs()
+    rng = np.random.default_rng(9)
+    chunks = [centers[i % 2] + rng.normal(0, 0.5, (15, 4)).astype(np.float32)
+              for i in range(4)]
+    post_labels = np.concatenate([labels, np.full(60, True)])
+
+    def build():
+        s = Session(policy=POL)
+        t = s.table(embeddings=emb, name="blobs")
+        s.register_oracle("P", SyntheticOracle(post_labels, flip_prob=0.0,
+                                               seed=7))
+        return s, t
+
+    s1, t1 = build()
+    t1.filter("P").collect()
+    for c in chunks:
+        t1.append(embeddings=c)          # 4 bumps, 4 dirty unions
+    r1 = t1.filter("P").collect()
+
+    s2, t2 = build()
+    t2.filter("P").collect()
+    v0 = t2.version
+    with t2.coalescing_appends():
+        for c in chunks:
+            t2.append(embeddings=c)
+        assert len(t2) == len(emb)       # reads see the pre-append table
+    assert t2.version == v0 + 1          # ONE bump for the whole batch
+    assert t1.version == v0 + 4
+    r2 = t2.filter("P").collect()
+
+    assert (r1.mask == r2.mask).all()
+    assert r1.n_llm_calls == r2.n_llm_calls
+    assert r1.pilot_calls == r2.pilot_calls
+    assert r1.n_replayed == r2.n_replayed
+    # identical patched assignments and dirty unions (modulo version
+    # numbering: both paths leave exactly clusters 0 and 1 dirty)
+    a1 = s1._assign_cache[("blobs", 4, POL.seed)]
+    a2 = s2._assign_cache[("blobs", 4, POL.seed)]
+    assert (a1 == a2).all()
+    d1 = t1._dirty[(4, POL.seed)]
+    d2 = t2._dirty[(4, POL.seed)]
+    assert ((d1 > 0) == (d2 > 0)).all() and (d2 > 0).sum() == 2
+
+
+def test_coalescing_nested_and_empty_blocks():
+    _, emb, _ = _blobs(n_per=40)
+    s = Session(policy=POL)
+    t = s.table(embeddings=emb, name="b")
+    v0 = t.version
+    with t.coalescing_appends():
+        pass                              # empty: no version bump
+    assert t.version == v0
+    with t.coalescing_appends():
+        t.append(embeddings=emb[:3])
+        with t.coalescing_appends():      # nested: outermost owns flush
+            t.append(embeddings=emb[3:5])
+        assert len(t) == len(emb)
+    assert t.version == v0 + 1 and len(t) == len(emb) + 5
+
+
+# ------------------------------------------------- 2. idle scheduler
+def test_idle_scheduler_performs_no_dispatch_work(ds):
+    sess = Session(policy=POL)
+    sch = sess.scheduler
+    assert sch.idle.wait(2.0)
+    # poke the condition: spurious wakeups must not tick the dispatcher
+    for _ in range(5):
+        with sch._cv:
+            sch._cv.notify_all()
+    time.sleep(0.1)
+    assert sch.stats.n_dispatch_ticks == 0
+    assert sch.idle.is_set()
+
+    t = sess.table(embeddings=ds.embeddings, name="r")
+    tk = sess.submit(t.filter(SyntheticOracle(
+        ds.labels["RV-Q1"], flip_prob=0.0, seed=7), name="A"))
+    assert tk.result().mask.sum() > 0
+    ticks_busy = sch.stats.n_dispatch_ticks
+    assert ticks_busy > 0
+    # drains back to idle and stays there with zero further dispatch work
+    assert sch.idle.wait(5.0)
+    time.sleep(0.1)
+    assert sch.stats.n_dispatch_ticks == ticks_busy
+    assert sch.stats.metrics_view()["service.dispatch_ticks"] == ticks_busy
+    sess.close()
+
+
+# ------------------------------------------------- 3. quota deferral
+def test_quota_defers_rows_without_dropping(ds):
+    sess, w, events = _watcher(ds, None, n_queries=1, arrive=90, quota=40)
+    summaries = w.run()
+    # arrivals outrun the quota: some ticks must carry a backlog, yet
+    # every row is eventually ingested in arrival order
+    assert max(s["backlog"] for s in summaries) > 0
+    assert all(s["rows"] <= 40 for s in summaries)
+    assert w.stats.n_rows_ingested == N and w.drained
+    assert len(w.handle) == N
+    src = w._sources[0][0]
+    assert src.state()["ingested"] == N
+    # more ticks than the no-quota schedule would need
+    assert w.stats.n_ticks > N / 90
+    sess.close()
+
+
+# ------------------------------------------------- 4. delta + sinks
+def test_delta_tracker_newly_matching_and_content_dedup():
+    d = DeltaTracker()
+    keys = [f"k{i}" for i in range(6)]
+    emit, dd = d.delta(np.array([1, 0, 1, 0, 0, 0], bool), keys)
+    assert emit == [0, 2] and dd == 0
+    d.ack(np.array([1, 0, 1, 0, 0, 0], bool))
+    # row 2 flips off, row 3 turns on; rows 0/2 already acked -> silent
+    emit, dd = d.delta(np.array([1, 0, 0, 1, 0, 0], bool), keys)
+    assert emit == [3] and dd == 0
+    d.ack(np.array([1, 0, 0, 1, 0, 0], bool))
+    # row 2 flips back on (same content): positional diff finds it,
+    # content dedup suppresses it; row 4 duplicates row 0's content
+    keys[4] = keys[0]
+    emit, dd = d.delta(np.array([1, 0, 1, 1, 1, 0], bool), keys)
+    assert emit == [] and dd == 2
+    # append-only guard
+    with pytest.raises(ValueError):
+        d.delta(np.zeros(3, bool), keys[:3])
+
+
+def test_sink_retry_then_dead_letter(tmp_path):
+    calls = {"n": 0}
+    delivered = []
+
+    def flaky(ev):
+        if ev["row"] == 13:
+            raise IOError("wedged")      # poison row: never succeeds
+        calls["n"] += 1
+        if ev["row"] == 7 and calls["n"] == 1:
+            raise IOError("transient")   # first attempt fails, retry wins
+        delivered.append(ev)
+
+    runner = SinkRunner(CallbackSink(flaky), retries=2,
+                        dead_letter_path=tmp_path / "dead.jsonl")
+    assert runner.deliver({"query": "q", "row": 7})
+    assert not runner.deliver({"query": "q", "row": 13})
+    assert runner.deliver({"query": "q", "row": 21})
+    st = runner.stats
+    assert st.n_delivered == 2 and st.n_dead_lettered == 1
+    assert st.n_retries >= 1
+    assert [e["row"] for e in delivered] == [7, 21]
+    assert runner.dead_letters[0]["row"] == 13
+    assert "OSError" in runner.dead_letters[0]["error"]
+    assert (tmp_path / "dead.jsonl").read_text().count("\n") == 1
+
+
+def test_dead_lettered_row_not_renotified(ds, tmp_path):
+    # a sink that always fails: every newly-matching row dead-letters,
+    # and later ticks never re-emit it (the delta engine acks regardless)
+    sess, w, _ = _watcher(ds, tmp_path, n_queries=1, arrive=100, quota=100)
+    sq = w.queries["p0"]
+    sq.runner = SinkRunner(CallbackSink(
+        lambda ev: (_ for _ in ()).throw(IOError("down"))), retries=0)
+    w.run(n_ticks=3)
+    dead = sq.runner.stats.n_dead_lettered
+    assert dead > 0 and sq.runner.stats.n_delivered == 0
+    rows = [d["row"] for d in sq.runner.dead_letters]
+    assert len(rows) == len(set(rows))   # each row dead-lettered once
+    sess.close()
+
+
+# ------------------------------------------------- 5. graceful shutdown
+def test_graceful_shutdown_runs_cleanups_once():
+    ran = []
+    gs = GracefulShutdown(exit_on_signal=False).install()
+    gs.register("a", lambda: ran.append("a"))
+    gs.register("boom", lambda: (_ for _ in ()).throw(RuntimeError("x")))
+    gs.register("b", lambda: ran.append("b"))
+    assert not gs.requested
+    gs.trigger(signal.SIGTERM)           # in-process handler invocation
+    assert gs.requested and gs.signum == signal.SIGTERM
+    gs.trigger(signal.SIGTERM)           # second signal: no re-run
+    gs.close()                           # normal exit: no re-run either
+    assert ran == ["a", "b"]             # failing cleanup didn't block b
+
+
+def test_graceful_shutdown_exit_mode_raises_systemexit():
+    ran = []
+    gs = GracefulShutdown(exit_on_signal=True)
+    gs.register("ckpt", lambda: ran.append(1))
+    with pytest.raises(SystemExit) as exc:
+        gs._handler(signal.SIGINT, None)
+    assert exc.value.code == 128 + signal.SIGINT
+    assert ran == [1]
+
+
+def test_watcher_shutdown_checkpoints_and_flushes_sinks(ds, tmp_path):
+    sess, w, _ = _watcher(ds, tmp_path, n_queries=1, arrive=80, quota=80)
+    sink_path = tmp_path / "out.jsonl"
+    sq = w.queries["p0"]
+    sq.runner = SinkRunner(JsonlSink(sink_path), retries=0)
+    w.run(n_ticks=2)
+    gs = GracefulShutdown(exit_on_signal=False).install()
+    gs.register("watch-shutdown", w.shutdown)
+    gs.trigger(signal.SIGINT)
+    gs.close()
+    assert w.has_checkpoint()
+    # the flushed sink file holds exactly the delivered notifications
+    lines = sink_path.read_text().strip().splitlines()
+    assert len(lines) == sq.runner.stats.n_delivered > 0
+    sess.close()
+
+
+# ---------------------------------------- 6. kill/restart mid-stream
+def test_midstream_reload_matches_unkilled_control(ds, tmp_path):
+    # control: full run, never killed
+    sess_c, w_c, ev_c = _watcher(ds, tmp_path / "ctl", arrive=60, quota=60)
+    ticks_c = w_c.run()
+    sess_c.close()
+
+    # kill after tick k (shutdown path = final checkpoint + flush)
+    k = 4
+    sess_a, w_a, ev_a = _watcher(ds, tmp_path / "run", arrive=60, quota=60)
+    for _ in range(k):
+        w_a.tick()
+    w_a.shutdown()
+    sess_a.close()
+
+    # restart: fresh session/watcher over the same stream + oracles
+    sess_b, w_b, ev_b = _watcher(ds, tmp_path / "run", arrive=60, quota=60)
+    assert w_b.has_checkpoint()
+    report = w_b.restore()
+    assert report.tables == ["feed"] and not report.skipped
+    # rebuild itself costs ~0 oracle calls (ingestion replay + memo load)
+    assert sess_b.stats.n_calls == 0
+    assert w_b.stats.n_ticks == k
+    ticks_b = w_b.run()
+    sess_b.close()
+
+    # ticks k+1..n notify exactly the control's rows, zero duplicates
+    # across the kill/restart (per query, by row AND by content key)
+    for q in ev_c:
+        ctl_tail = [(e["tick"], e["row"]) for e in ev_c[q] if e["tick"] > k]
+        got_tail = [(e["tick"], e["row"]) for e in ev_b[q]]
+        assert got_tail == ctl_tail
+        all_keys = [e["key"] for e in ev_a[q]] + [e["key"] for e in ev_b[q]]
+        assert len(all_keys) == len(set(all_keys))
+        assert sorted(all_keys) == sorted(e["key"] for e in ev_c[q])
+    # and the tail's oracle spend matches the unkilled control's exactly
+    assert ([t["oracle_calls"] for t in ticks_b]
+            == [t["oracle_calls"] for t in ticks_c[k:]])
+
+
+# ------------------------------- 7. sublinear cost + unified metrics
+def test_per_tick_cost_sublinear_vs_full_refilter(ds):
+    sess, w, _ = _watcher(ds, None, n_queries=1, arrive=60, quota=60)
+    summaries = w.run()
+    inc_calls = [s["oracle_calls"] for s in summaries]
+    sess.close()
+
+    # control: re-filter the whole table from scratch every tick
+    full_calls = []
+    for t in range(1, len(summaries) + 1):
+        n_t = min(N, 60 * t)
+        s = Session(policy=POL)
+        s.register_oracle("p0", SyntheticOracle(
+            ds.labels["RV-Q1"], flip_prob=0.0, seed=7,
+            token_lens=ds.token_lens))
+        h = s.table(texts=list(ds.texts[:n_t]),
+                    embeddings=ds.embeddings[:n_t], name="feed")
+        full_calls.append(h.filter("p0").collect().n_llm_calls)
+
+    assert sum(inc_calls) < 0.5 * sum(full_calls)
+    # steady state: a tick pays for its own rows, not the table
+    assert all(c <= 60 for c in inc_calls[1:])
+    assert full_calls[-1] > 3 * inc_calls[-1]
+
+
+def test_stream_metrics_under_unified_names(ds, tmp_path):
+    tr = Tracer(metrics=MetricsRegistry())
+    with use_tracer(tr):
+        sess, w, ev = _watcher(ds, tmp_path, n_queries=1, arrive=80,
+                               quota=80)
+        w.run(n_ticks=3)
+        sess.close()
+    snap = tr.metrics.snapshot()
+    assert snap["stream.ticks"] == 3
+    assert snap["stream.rows_ingested"] == w.stats.n_rows_ingested
+    # tick 1 creates the table; ticks 2..3 append through the handle
+    assert snap["session.append_rows"] == w.stats.n_rows_ingested - 80
+    assert snap["sink.delivered"] == len(ev["p0"])
+    # stream_tick spans wrap each tick
+    assert sum(1 for s in tr.spans() if s.kind == "stream_tick") == 3
+    # sync_from(watcher) carries the same totals into an exportable dump
+    reg = MetricsRegistry()
+    reg.sync_from(w)
+    out = reg.snapshot()
+    assert out["stream.notifications"] == w.stats.n_notifications
+    assert out["sink.delivered"] == len(ev["p0"])
+    assert out["sink.dead_lettered"] == 0
+
+
+def test_memo_dirty_clusters_metric():
+    # an append touching ONE of four well-separated clusters re-votes that
+    # cluster only, and the partial-replay path reports it under the
+    # unified name
+    centers, emb, labels = _blobs()
+    post = np.concatenate([labels, np.full(10, True)])
+    tr = Tracer(metrics=MetricsRegistry())
+    with use_tracer(tr):
+        s = Session(policy=POL)
+        t = s.table(embeddings=emb, name="b")
+        s.register_oracle("P", SyntheticOracle(post, flip_prob=0.0, seed=7))
+        t.filter("P").collect()
+        rng = np.random.default_rng(3)
+        t.append(embeddings=(centers[0]
+                             + rng.normal(0, 0.5, (10, 4))).astype(np.float32))
+        r = t.filter("P").collect()
+    assert tr.metrics.snapshot()["memo.dirty_clusters"] == 1
+    assert r.n_replayed > 0
