@@ -1,0 +1,76 @@
+"""Sharded-round overhead: shards=N vs the single-host round driver.
+
+The sharded executor (repro.distributed.round) buys mesh-level
+parallelism with two costs on one host: a strict-FIFO dispatcher thread
+and per-shard vote dispatches instead of one segmented call.  This
+bench pins both down on the Fig. 4 imdb case and asserts the contract
+the speedup story rests on:
+
+- masks, call counts, and cluster logs bit-identical at every shard
+  count (the all-gather merge is invisible);
+- per-round oracle batch sizes shrink ~1/shards (what each mesh host
+  would actually pay);
+- single-host overhead of sharding stays bounded (<2.5x wall on the
+  small case — the dispatcher thread dominates at toy sizes).
+
+Emitted per shard count: wall us/oracle-call plus the batch geometry.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import emit
+from repro.core import CSVConfig, SyntheticOracle, semantic_filter
+from repro.data import make_dataset
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _run(ds, shards, xi):
+    oracle = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+                             token_lens=ds.token_lens)
+    cfg = CSVConfig(n_clusters=4, xi=xi, shards=shards)
+    t0 = time.time()
+    r = semantic_filter(ds.embeddings, oracle, cfg)
+    return r, time.time() - t0
+
+
+def main(small: bool = True):
+    n = 4000 if small else 20000
+    ds = make_dataset("imdb_review", n=n, seed=0)
+    xi = 0.005
+    rows = []
+    base, base_wall = _run(ds, 1, xi)
+    for shards in SHARD_COUNTS:
+        r, wall = _run(ds, shards, xi)
+        assert (r.mask == base.mask).all(), f"shards={shards}: mask diverged"
+        assert r.n_llm_calls == base.n_llm_calls, \
+            f"shards={shards}: call counts diverged"
+        assert r.cluster_log == base.cluster_log, \
+            f"shards={shards}: cluster log diverged"
+        batches = [b for rr in r.round_log for b in rr.oracle_batches]
+        mean_batch = float(np.mean(batches)) if batches else 0.0
+        emit(f"sharded/imdb/shards{shards}",
+             wall / max(1, r.n_llm_calls) * 1e6,
+             f"oracle={r.n_llm_calls};mean_batch={mean_batch:.0f};"
+             f"rounds={len(r.round_log)};wall={wall:.2f}s")
+        rows.append(("imdb_review", f"shards{shards}",
+                     {"oracle_calls": int(r.n_llm_calls),
+                      "tokens": int(r.input_tokens + r.output_tokens)}))
+        if shards > 1:
+            base_batches = [b for rr in base.round_log
+                            for b in rr.oracle_batches]
+            assert mean_batch <= float(np.mean(base_batches)), \
+                "sharding did not shrink per-dispatch batches"
+            assert wall <= max(base_wall, 1e-3) * 2.5 + 0.5, \
+                f"shards={shards}: single-host overhead blew past 2.5x"
+    return rows
+
+
+if __name__ == "__main__":
+    main(small="--full" not in sys.argv)

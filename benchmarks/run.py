@@ -61,7 +61,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig4,table2,table3,table4,table5,"
                          "fig6,appb,kernels,roofline,plan_order,api_overhead,"
-                         "session_reuse,service,stream")
+                         "session_reuse,service,stream,sharded")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
@@ -84,8 +84,8 @@ def main() -> None:
                             bench_fig6_synthetic, bench_appb_backbones,
                             bench_kernels, bench_plan_order,
                             bench_api_overhead, bench_session_reuse,
-                            bench_service_throughput, bench_stream_ingest,
-                            roofline_report)
+                            bench_service_throughput, bench_sharded_round,
+                            bench_stream_ingest, roofline_report)
 
     suites = [
         ("fig2", bench_fig2_distance), ("fig4", bench_fig4_efficiency),
@@ -97,6 +97,7 @@ def main() -> None:
         ("session_reuse", bench_session_reuse),
         ("service", bench_service_throughput),
         ("stream", bench_stream_ingest),
+        ("sharded", bench_sharded_round),
         ("roofline", roofline_report),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Docs honesty gate: every link and path named in the docs must exist.
+
+Scans ``docs/*.md`` and ``ROADMAP.md`` for
+
+- relative markdown links  — ``[text](other.md)``, ``[x](../benchmarks/...)``
+  must resolve from the referencing file's directory (fragments ignored);
+- repo file paths          — ``src/repro/...``, ``tests/...``,
+  ``benchmarks/...``, ``examples/...``, ``scripts/...``, ``docs/...`` and
+  the ``launch/<file>`` shorthand (→ ``src/repro/launch/<file>``) must
+  name an existing file or directory;
+- dotted module paths      — ``repro.service.log`` must import from
+  ``src/`` as a module/package, allowing one trailing attribute segment
+  (``repro.plan.cost.est_oracle_calls`` checks ``repro/plan/cost.py``).
+
+Exit 1 with one line per dangling reference.  CI runs this as the
+``docs-check`` job; run locally with ``python scripts/check_docs.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(
+    r"\b((?:src|tests|benchmarks|examples|scripts|docs|launch)/"
+    r"[A-Za-z0-9_\-./]*[A-Za-z0-9_\-])")
+MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+\b")
+
+
+def _iter_sources():
+    yield ROOT / "ROADMAP.md"
+    yield from sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links(src: pathlib.Path, text: str, errors: list) -> None:
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (src.parent / rel).exists():
+            errors.append(f"{src.relative_to(ROOT)}: broken link ({target})")
+
+
+def check_paths(src: pathlib.Path, text: str, errors: list) -> None:
+    for m in PATH_RE.finditer(text):
+        path = m.group(1)
+        if path.startswith("launch/"):
+            path = "src/repro/" + path
+        if not (ROOT / path).exists():
+            errors.append(
+                f"{src.relative_to(ROOT)}: dangling path ({m.group(1)})")
+
+
+def check_modules(src: pathlib.Path, text: str, errors: list) -> None:
+    for m in MODULE_RE.finditer(text):
+        parts = m.group(0).split(".")
+        # allow one trailing attribute: repro.plan.cost.est_oracle_calls
+        for trim in (parts, parts[:-1]):
+            if trim == ["repro"]:
+                continue
+            base = ROOT / "src" / pathlib.Path(*trim)
+            if base.with_suffix(".py").exists() or \
+                    (base / "__init__.py").exists():
+                break
+        else:
+            errors.append(
+                f"{src.relative_to(ROOT)}: unresolvable module "
+                f"({m.group(0)})")
+
+
+def main() -> int:
+    errors: list = []
+    n_files = 0
+    for src in _iter_sources():
+        if not src.exists():
+            errors.append(f"missing source file: {src}")
+            continue
+        n_files += 1
+        text = src.read_text()
+        check_links(src, text, errors)
+        check_paths(src, text, errors)
+        check_modules(src, text, errors)
+    # docs/README.md must link every sibling document
+    readme = (ROOT / "docs" / "README.md").read_text()
+    for doc in sorted((ROOT / "docs").glob("*.md")):
+        if doc.name != "README.md" and f"({doc.name})" not in readme:
+            errors.append(f"docs/README.md: does not link {doc.name}")
+    for e in errors:
+        print(f"docs-check: {e}")
+    print(f"docs-check: {n_files} files scanned, "
+          f"{len(errors)} dangling reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

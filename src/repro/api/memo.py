@@ -122,6 +122,11 @@ class SessionMemo:
     """Session-owned store behind the reuse views (one per Session)."""
 
     def __init__(self):
+        # durability hook: called as hook(kind, **fields) whenever an
+        # entry worth persisting is stored — kinds "decision",
+        # "selectivity", "pilot", "join" (repro.service.log appends a
+        # framed record per event; None costs nothing)
+        self.hook = None
         self._decisions: Dict[tuple, DecisionMemo] = {}
         self._selectivity: Dict[tuple, SelObservation] = {}
         self._pilots: Dict[tuple, PredStats] = {}
@@ -220,6 +225,11 @@ class SessionMemo:
             right_version=right_handle.version,
             pair_mask=np.asarray(pair_mask, bool).copy(),
             fingerprint=key[3])
+        if self.hook is not None:
+            self.hook("join", left=left_handle.name,
+                      right=right_handle.name,
+                      ident=oracle_identity(oracle),
+                      jm=self._join_decisions[key])
 
     def drop_joins(self, table: str) -> int:
         """Mutation of ``table``: drop every join decision touching it on
@@ -316,6 +326,12 @@ class ReuseView:
             version=self.handle.version, n=n_in, mask=fr.mask.copy(),
             cluster_key=(int(cfg.n_clusters), int(cfg.seed)),
             fingerprint=fp)
+        if self.memo.hook is not None:
+            ident = oracle_identity(leaf.oracle)
+            self.memo.hook("selectivity", table=self.handle.name,
+                           ident=ident, obs=self.memo._selectivity[key])
+            self.memo.hook("decision", table=self.handle.name, ident=ident,
+                           dm=self.memo._decisions[key + (fp,)])
 
     # ------------------------------------------------------ planning side
     def pred_stats(self, leaf: Pred, cfg: CSVConfig, seed: int,
@@ -361,3 +377,8 @@ class ReuseView:
         key = self.memo._pred_key(self.handle.name, leaf.oracle)
         self.memo._pilots[
             key + (self.handle.version, int(seed), int(pilot_size))] = stats
+        if self.memo.hook is not None:
+            self.memo.hook("pilot", table=self.handle.name,
+                           ident=oracle_identity(leaf.oracle),
+                           version=self.handle.version, seed=int(seed),
+                           pilot_size=int(pilot_size), stats=stats)

@@ -59,6 +59,11 @@ class ExecutionPolicy:
     # ---- CSV driver (mirrors CSVConfig) ----
     executor: str = "round"
     pipeline_depth: int = 1
+    # shards: split each round's sample/oracle/vote wave across N mesh
+    # hosts (repro.distributed.round); bit-identical to shards=1 — a
+    # physical knob like executor/pipeline_depth, excluded from the memo
+    # fingerprint (docs/distributed.md)
+    shards: int = 1
     n_clusters: int = 4
     xi: float = 0.005
     epsilon: Optional[float] = None   # error tolerance; derives xi when set
@@ -93,6 +98,14 @@ class ExecutionPolicy:
     baseline: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     # ---- budget ----
     max_oracle_calls: Optional[int] = None
+    # ---- durability (repro.service.log; docs/distributed.md) ----
+    # log_dir: when set, FilterService(policy=...) opens an append-only
+    # session log there instead of whole-session snapshots; restart =
+    # snapshot + log-tail replay.  Compaction triggers when either
+    # threshold is crossed (checked at quiescent points).
+    log_dir: Optional[str] = None
+    log_compact_bytes: int = 4 << 20
+    log_compact_records: int = 10_000
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -103,6 +116,12 @@ class ExecutionPolicy:
                              f"expected one of {EXECUTORS}")
         if self.pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
+        if self.shards < 1:
+            raise ValueError("shards must be >= 1")
+        if self.shards > 1 and self.executor != "round":
+            raise ValueError("shards > 1 requires executor='round'")
+        if self.log_compact_bytes < 1 or self.log_compact_records < 1:
+            raise ValueError("log compaction thresholds must be >= 1")
         if self.vote not in (None, "uni", "sim"):
             raise ValueError(f"unknown vote {self.vote!r}; "
                              "expected 'uni' or 'sim'")
@@ -129,7 +148,7 @@ class ExecutionPolicy:
             epsilon=self.epsilon, theory_l=self.theory_l, sim_v=self.sim_v,
             sim_bandwidth=self.sim_bandwidth, kmeans_iters=self.kmeans_iters,
             seed=self.seed, executor=self.executor,
-            pipeline_depth=self.pipeline_depth)
+            pipeline_depth=self.pipeline_depth, shards=self.shards)
 
     def to_join_config(self) -> JoinConfig:
         right = (self.n_clusters_right if self.n_clusters_right is not None
@@ -149,7 +168,8 @@ class ExecutionPolicy:
             vote=cfg.vote, epsilon=cfg.epsilon, theory_l=cfg.theory_l,
             sim_v=cfg.sim_v, sim_bandwidth=cfg.sim_bandwidth,
             kmeans_iters=cfg.kmeans_iters, seed=cfg.seed,
-            executor=cfg.executor, pipeline_depth=cfg.pipeline_depth)
+            executor=cfg.executor, pipeline_depth=cfg.pipeline_depth,
+            shards=cfg.shards)
         fields.update(overrides)
         return cls(**fields)
 

@@ -142,6 +142,9 @@ class TableHandle:
         get_tracer().metrics.inc("session.append_rows", n_new)
         # growing a table reindexes pair ids of joins against it
         self.session._clear_pair_oracles(self.name)
+        self.session._log_mutation(
+            "append", self, texts=list(texts) if texts is not None else None,
+            embeddings=new_emb)
         return self
 
     @contextlib.contextmanager
@@ -199,6 +202,8 @@ class TableHandle:
         n_new = len(texts) if texts is not None else len(new_emb)
         get_tracer().metrics.inc("session.append_rows", n_new)
         self.session._clear_pair_oracles(self.name)
+        self.session._log_mutation("append", self, texts=texts,
+                                   embeddings=new_emb)
 
     def update(self, ids, texts: Optional[Sequence[str]] = None,
                embeddings=None) -> "TableHandle":
@@ -218,6 +223,10 @@ class TableHandle:
         self.version += 1
         self._apply_touched(touched)
         self.session._invalidate_oracles(self.name, ids)
+        self.session._log_mutation(
+            "update", self, ids=ids,
+            texts=list(texts) if texts is not None else None,
+            embeddings=new_emb)
         return self
 
     # ------------------------------------------------------------ queries
@@ -277,10 +286,14 @@ class Session:
 
     def __init__(self, policy: Optional[ExecutionPolicy] = None,
                  embedder: Optional[Callable] = None, engine=None,
-                 embedding_cache: Optional[EmbeddingCache] = None):
+                 embedding_cache: Optional[EmbeddingCache] = None,
+                 coordinator=None):
         self.policy = policy or ExecutionPolicy()
         self.embedder = embedder
         self.engine = engine  # optional ServingEngine for ModelOracles
+        # optional repro.distributed.DispatchCoordinator: several sessions'
+        # schedulers feed one merged dispatch lane (docs/distributed.md)
+        self.coordinator = coordinator
         # content-hash keyed embedding store: per-session by default; pass
         # one cache to several sessions to share embeddings explicitly
         # explicit None check: an empty cache is falsy (__len__ == 0), so
@@ -303,6 +316,10 @@ class Session:
         # session state written from query threads
         self._lock = threading.Lock()
         self._scheduler = None  # lazy repro.service.QueryScheduler
+        # attached repro.service.log.SessionLogStore recorder (None when
+        # the session is not log-backed); table mutations and precluster
+        # fits notify it through _log_mutation/_log_precluster
+        self._session_log = None
 
     # -------------------------------------------------------------- tables
     def table(self, texts: Optional[Sequence[str]] = None, embeddings=None,
@@ -353,6 +370,8 @@ class Session:
         if name in self._oracles:
             raise ValueError(f"oracle {name!r} already registered")
         self._oracles[name] = (oracle, proxy)
+        if self._session_log is not None:
+            self._session_log.bind_oracle(name, oracle)
 
     def oracle(self, name: str):
         return self._lookup_oracle(name)[0]
@@ -398,6 +417,9 @@ class Session:
                         (int(n_clusters), int(seed)),
                         np.full(int(n_clusters), handle.version,
                                 dtype=np.int64))
+                    if self._session_log is not None:
+                        self._session_log.record_precluster(
+                            handle, int(n_clusters), int(seed))
         return self._assign_cache[key]
 
     def _invalidate_oracles(self, table_name: str, ids: np.ndarray) -> None:
@@ -425,6 +447,13 @@ class Session:
                 oracle.memo_clear()
         self.memo.drop_joins(table_name)
 
+    # ------------------------------------------------------- durability log
+    def _log_mutation(self, kind: str, handle: TableHandle, **fields) -> None:
+        """Forward a table mutation to the attached session log (no-op for
+        plain sessions)."""
+        if self._session_log is not None:
+            self._session_log.record_mutation(kind, handle, **fields)
+
     # ---------------------------------------------------------- accounting
     def _absorb(self, delta: OracleStats) -> None:
         with self._lock:
@@ -443,7 +472,8 @@ class Session:
         submissions into one admission wave) or ``stats``."""
         if self._scheduler is None:
             from repro.service.scheduler import QueryScheduler
-            self._scheduler = QueryScheduler(self)
+            self._scheduler = QueryScheduler(
+                self, coordinator=self.coordinator)
         return self._scheduler
 
     def submit(self, query, policy: Optional[ExecutionPolicy] = None):

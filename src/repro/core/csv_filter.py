@@ -62,6 +62,9 @@ class CSVConfig:
     executor: str = "round"  # "round" | "sequential"
     pipeline_depth: int = 1  # oracle waves per round (>1 overlaps prefill
     #                          of the next wave with voting of the current)
+    shards: int = 1  # >1 partitions each round's clusters across shards
+    #                  (repro.distributed.round) — bit-identical masks,
+    #                  call counts, and memo state to shards=1
 
     @property
     def ub_(self) -> float:
@@ -141,6 +144,7 @@ class RoundResult:
     n_undetermined: int
     waves: int
     oracle_batches: list  # submitted batch size per wave
+    shards: int = 1  # shards that executed this round (1 = single-host)
 
 
 def plan_round(queue: list, rng: np.random.Generator, xi: float,
@@ -420,6 +424,10 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
     if cfg.executor not in ("round", "sequential"):
         raise ValueError(f"unknown executor {cfg.executor!r}; "
                          "expected 'round' or 'sequential'")
+    if cfg.shards < 1:
+        raise ValueError(f"shards must be >= 1, got {cfg.shards}")
+    if cfg.shards > 1 and cfg.executor != "round":
+        raise ValueError("shards > 1 requires executor='round'")
     t0 = monotonic()
     rng = np.random.default_rng(cfg.seed)
     n = embeddings.shape[0]
@@ -456,8 +464,15 @@ def semantic_filter(embeddings: np.ndarray, oracle, cfg: CSVConfig = None,
         queue = [rows[assign == c] for c in range(int(assign.max()) + 1)]
         queue = [c for c in queue if len(c)]
 
-    run = (_run_sequential_executor if cfg.executor == "sequential"
-           else _run_round_executor)
+    if cfg.executor == "sequential":
+        run = _run_sequential_executor
+    elif cfg.shards > 1:
+        # lazy import: repro.distributed.round imports this module's round
+        # primitives (plan_round, _vote_wave, _recluster_or_fallback)
+        from repro.distributed.round import run_sharded_executor
+        run = run_sharded_executor
+    else:
+        run = _run_round_executor
     n_voted, n_fallback, rounds_used, recluster_time = run(
         emb, oracle, cfg, rng, xi, result, decided, cluster_log, round_log,
         queue)

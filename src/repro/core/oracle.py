@@ -85,6 +85,10 @@ class BaseOracle:
     def __init__(self):
         self.stats = OracleStats()
         self._memo: dict[int, bool] = {}
+        # durability hook: called as memo_hook(ids, labels) after every
+        # fresh-evaluation commit (repro.service.log records the entries
+        # so a restarted session replays them at zero oracle cost)
+        self.memo_hook = None
 
     @contextlib.contextmanager
     def scope(self):
@@ -137,6 +141,8 @@ class BaseOracle:
         self.stats.input_tokens += self._tokens_of(mids)
         self.stats.output_tokens += len(missing)  # 1 decision token each
         self.stats.batch_sizes.append(len(missing))
+        if self.memo_hook is not None and len(missing):
+            self.memo_hook(mids, np.asarray(labels, dtype=bool))
         return out
 
     def __call__(self, ids) -> np.ndarray:

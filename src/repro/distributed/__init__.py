@@ -1,2 +1,6 @@
 from repro.distributed.api import shard_act, sharding_context, current_rules
+from repro.distributed.coordinator import (CoordinatedLane,
+                                           DispatchCoordinator, LaneStats)
+from repro.distributed.round import (ShardRoundOutput, run_sharded_executor,
+                                     shard_clusters)
 from repro.distributed.rules import MeshRules, resolve_spec, DEFAULT_LOGICAL_RULES

@@ -39,6 +39,10 @@ class EmbeddingCache:
         self.hits = 0
         self.misses = 0
         self.encoded_rows = 0
+        # durability hook: called as hook(keys, rows) after fresh rows are
+        # inserted (repro.service.log appends them so a restart rebuilds
+        # the cache without re-encoding)
+        self.hook = None
 
     def __len__(self) -> int:
         return len(self._store)
@@ -71,6 +75,8 @@ class EmbeddingCache:
             for row, pos in enumerate(missing_pos):
                 self._store[keys[pos]] = fresh[row]
             self.encoded_rows += len(missing_pos)
+            if self.hook is not None:
+                self.hook([keys[p] for p in missing_pos], fresh)
         self.misses += len(missing_pos)
         self.hits += len(keys) - len(missing_pos)
         return np.stack([self._store[k] for k in keys]).astype(np.float32)

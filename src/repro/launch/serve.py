@@ -84,7 +84,8 @@ def export_trace(trace_dir: str, tracer: Tracer, registry: MetricsRegistry,
 
 
 def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
-                     pipeline_depth: int = 1):
+                     pipeline_depth: int = 1, shards: int = 1,
+                     log_dir: str = None):
     """K predicates through the concurrent service over one engine."""
     from repro.api import ExecutionPolicy, Session
     from repro.service import FilterService
@@ -92,14 +93,33 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
 
     preds = (SERVICE_PREDICATES * ((k - 1) // len(SERVICE_PREDICATES) + 1))[:k]
     sess = Session(policy=ExecutionPolicy(n_clusters=4, min_sample=25,
-                                          pipeline_depth=pipeline_depth))
+                                          pipeline_depth=pipeline_depth,
+                                          shards=shards))
     table = sess.table(embeddings=embeddings, name="reviews")
     for i, text in enumerate(preds):
         sess.register_oracle(f"p{i}", ModelOracle(engine, tok, text,
                                                   ds.texts))
-    service = FilterService(sess, store_dir=state_dir)
-    if service.store.exists():
-        print(f"[serve] restore: {service.restore()}")
+    if log_dir is not None:
+        # append-only log (docs/distributed.md): continuous durability,
+        # restart = snapshot + log-tail replay
+        service = FilterService(sess, log_dir=log_dir)
+        rep = service.restore()
+        if rep is not None:
+            print(f"[serve] restore: {rep}")
+            if rep.n_dropped:
+                print(f"[serve] WARNING: {rep.n_dropped} entry(ies) did "
+                      "not survive the restart (see report above)")
+    else:
+        service = FilterService(sess, store_dir=state_dir)
+        if service.store.exists():
+            rep = service.restore()
+            print(f"[serve] restore: {rep}")
+            n_dropped = len(rep.dropped) + len(rep.skipped)
+            if n_dropped:
+                # previously discarded silently: a warm start that lost
+                # state looked identical to one that kept it all
+                print(f"[serve] WARNING: {n_dropped} entry(ies) did not "
+                      "survive the restart (see report above)")
     service.register_tenant("default", sess.policy)
     # exit-mode shutdown: SIGINT/SIGTERM writes a final session checkpoint
     # (best-effort mid-run — whatever rounds completed are memoized and
@@ -125,8 +145,8 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
           f"bucket fill {engine.batcher.fill_ratio:.2f}, "
           f"truncated prompts {merge.n_truncated}")
     shutdown.close()   # final checkpoint (once) + restore signal handlers
-    print(f"[serve] session checkpointed to {state_dir} — rerun to replay "
-          "at 0 LLM calls")
+    print(f"[serve] session checkpointed to {log_dir or state_dir} — rerun "
+          "to replay at 0 LLM calls")
     service.close()
     return sess, results
 
@@ -145,6 +165,13 @@ def main():
                          "restartable session store)")
     ap.add_argument("--state-dir", default="/tmp/repro_serve_state",
                     help="SessionStore directory for --service mode")
+    ap.add_argument("--log-dir", default=None, metavar="DIR",
+                    help="append-only session log directory (--service "
+                         "mode); replaces --state-dir snapshots with "
+                         "continuous checkpointing + log-tail restarts")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="split each CSV round's sample/oracle/vote wave "
+                         "across N shards (bit-identical to 1)")
     ap.add_argument("--attn-impl", default=None,
                     choices=["auto", "plain", "chunked", "tri", "flash",
                              "flash-ref"],
@@ -188,7 +215,8 @@ def main():
     if args.service > 0:
         sess, results = serve_concurrent(
             engine, tok, ds, embeddings, args.service,
-            args.state_dir, pipeline_depth=args.pipeline_depth)
+            args.state_dir, pipeline_depth=args.pipeline_depth,
+            shards=args.shards, log_dir=args.log_dir)
         if tracer is not None and args.trace_dir:
             print(results[0].profile())
             export_trace(args.trace_dir, tracer, registry,

@@ -8,6 +8,10 @@ Three layers over the lazy ``repro.api`` surface (docs/service.md):
   call counts stay bit-identical to serial ``collect()``.
 - ``SessionStore`` (store.py): session memo + caches to disk; a reloaded
   session replays previously-collected queries at zero oracle calls.
+- ``SessionLogStore`` (log.py): the incremental alternative — every memo
+  decision / cache insert / table mutation appends to a write-ahead log
+  the moment it happens; restart = snapshot + log-tail replay
+  (docs/distributed.md).
 - ``FilterService`` (server.py): multi-tenant front end with aggregate
   ``max_oracle_calls`` admission control.
 
@@ -18,6 +22,8 @@ Three layers over the lazy ``repro.api`` surface (docs/service.md):
         tickets = [svc.submit("t0", q) for q in queries]
     results = svc.gather(*tickets)
 """
+from repro.service.log import (ConcurrentWriterError, LogRestoreReport,
+                               SessionLogStore)
 from repro.service.scheduler import (BatchingOracleProxy, QueryScheduler,
                                      QueryTicket, ServiceStats)
 from repro.service.server import (FilterService, TenantAccount,
@@ -28,4 +34,5 @@ __all__ = [
     "BatchingOracleProxy", "QueryScheduler", "QueryTicket", "ServiceStats",
     "FilterService", "TenantAccount", "TenantBudgetError",
     "RestoreReport", "SessionStore", "STORE_SCHEMA",
+    "ConcurrentWriterError", "LogRestoreReport", "SessionLogStore",
 ]

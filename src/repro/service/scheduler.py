@@ -218,7 +218,7 @@ class QueryScheduler:
     """
 
     def __init__(self, session, pipeline_depth: Optional[int] = None,
-                 pack: bool = True):
+                 pack: bool = True, coordinator=None):
         self.session = session
         self.stats = ServiceStats()
         # tick-level pipelining: CSVConfig.pipeline_depth generalized to
@@ -248,8 +248,14 @@ class QueryScheduler:
         self._closed = False
         self._next_index = 0
         # one FIFO lane for ALL queries' oracles: the merged dispatch
-        # drains through it in deterministic (task, submission) order
-        self._dispatcher = AsyncOracleDispatcher()
+        # drains through it in deterministic (task, submission) order.
+        # With a DispatchCoordinator the lane is shared across schedulers
+        # (repro.distributed.coordinator): waves still leave here in this
+        # scheduler's submission order, so per-query bit-identity holds.
+        if coordinator is not None:
+            self._dispatcher = coordinator.attach()
+        else:
+            self._dispatcher = AsyncOracleDispatcher()
         self._loop_thread = threading.Thread(
             target=self._loop, daemon=True, name="csv-service-scheduler")
         self._loop_thread.start()

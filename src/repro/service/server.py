@@ -62,10 +62,27 @@ class FilterService:
         service.checkpoint()              # restartable: see store.py
     """
 
-    def __init__(self, session, store_dir=None):
+    def __init__(self, session, store_dir=None, log_dir=None):
+        if store_dir is not None and log_dir is not None:
+            raise ValueError("pass store_dir (whole-session snapshots) OR "
+                             "log_dir (append-only log), not both")
+        if log_dir is None:
+            log_dir = session.policy.log_dir
         self.session = session
         self.store = SessionStore(store_dir) if store_dir is not None \
             else None
+        self.log = None
+        if log_dir is not None:
+            from repro.service.log import SessionLogStore
+            self.log = SessionLogStore(
+                log_dir,
+                compact_bytes=session.policy.log_compact_bytes,
+                compact_records=session.policy.log_compact_records)
+            if not self.log.exists():
+                # fresh directory: start recording now; with prior state
+                # the caller decides when to restore() (it must register
+                # tables/oracles first), and restore() attaches after
+                self.log.attach(session)
         self._tenants: Dict[str, TenantAccount] = {}
         # idempotent settlement closures of in-flight tickets, by index;
         # each removes itself once run (done-callback or gather)
@@ -174,19 +191,43 @@ class FilterService:
             results.append(res)
         if first_error is not None:
             raise first_error
+        if self.log is not None and self.log.attached:
+            # gather's return is a quiescent point for the gathered work:
+            # fold the log tail into a snapshot when thresholds say so
+            self.log.compact_if_due(self.session)
         return results
 
     # --------------------------------------------------------- persistence
     def checkpoint(self, tag: str = "session"):
+        """Snapshot mode: write a whole-session snapshot.  Log mode: fold
+        the log tail into a fresh snapshot (compaction) — continuous
+        durability means there is nothing else to flush."""
+        if self.log is not None:
+            self.log.compact(self.session)
+            return self.log.dir
         if self.store is None:
-            raise ValueError("FilterService built without store_dir")
+            raise ValueError("FilterService built without store_dir or "
+                             "log_dir")
         return self.store.save(self.session, tag)
 
-    def restore(self, tag: str = "session",
-                strict: bool = False) -> RestoreReport:
+    def restore(self, tag: str = "session", strict: bool = False):
+        """Rebuild session state.  Snapshot mode returns a
+        ``RestoreReport``; log mode replays snapshot + log tail, starts
+        recording, and returns a ``LogRestoreReport``.  Either way the
+        session's tables and oracles must be registered first."""
+        if self.log is not None:
+            rep = None
+            if not self.log.attached:
+                if self.log.exists():
+                    rep = self.log.restore(self.session, strict=strict)
+                self.log.attach(self.session)
+            return rep
         if self.store is None:
-            raise ValueError("FilterService built without store_dir")
+            raise ValueError("FilterService built without store_dir or "
+                             "log_dir")
         return self.store.load(self.session, tag, strict=strict)
 
     def close(self) -> None:
         self.session.close()
+        if self.log is not None:
+            self.log.close()

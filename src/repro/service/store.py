@@ -46,6 +46,7 @@ import numpy as np
 from repro.api.memo import (DecisionMemo, JoinDecisionMemo, SelObservation,
                             oracle_identity)
 from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.obs.trace import get_tracer
 from repro.plan.cost import PredStats
 
 STORE_SCHEMA = 1
@@ -92,7 +93,16 @@ def _fingerprint_matches(saved: dict, handle) -> bool:
 
 @dataclasses.dataclass
 class RestoreReport:
-    """What a ``SessionStore.load`` actually rebound."""
+    """What a ``SessionStore.load`` actually rebound.
+
+    ``skipped`` lists entries present in the store that could not be
+    rebound onto THIS session (unregistered table/oracle, changed
+    content).  ``dropped`` lists entries the SAVE already left out
+    (e.g. decisions of an oracle that was never registered under a
+    durable name) — previously recorded in the manifest but silently
+    discarded at load; warm-start paths surface them so a quiet
+    "restored N masks" doesn't hide state that never made it to disk.
+    """
     tables: List[str] = dataclasses.field(default_factory=list)
     n_decisions: int = 0
     n_selectivities: int = 0
@@ -101,6 +111,7 @@ class RestoreReport:
     n_embedding_rows: int = 0
     n_oracle_memo_entries: int = 0
     skipped: List[str] = dataclasses.field(default_factory=list)
+    dropped: List[str] = dataclasses.field(default_factory=list)
 
     def __str__(self) -> str:
         s = (f"restored {len(self.tables)} table(s), "
@@ -111,6 +122,9 @@ class RestoreReport:
              f"{self.n_oracle_memo_entries} oracle memo entry(ies)")
         if self.skipped:
             s += f"; skipped: {'; '.join(self.skipped)}"
+        if self.dropped:
+            s += (f"; {len(self.dropped)} entry(ies) dropped at save: "
+                  f"{'; '.join(self.dropped)}")
         return s
 
 
@@ -242,7 +256,7 @@ class SessionStore:
                 f"session store schema {meta.get('store_schema')!r} does "
                 f"not match this build ({STORE_SCHEMA}); re-save the "
                 "session (stale stores are invalidated, not migrated)")
-        rep = RestoreReport()
+        rep = RestoreReport(dropped=list(meta.get("dropped", [])))
         memo = session.memo
 
         def _skip(msg: str):
@@ -356,4 +370,7 @@ class SessionStore:
             ident.memo_restore({int(i): bool(v)
                                 for i, v in zip(ids, vals)})
             rep.n_oracle_memo_entries += len(ids)
+        if rep.dropped or rep.skipped:
+            get_tracer().metrics.inc("store.restore_dropped",
+                                     len(rep.dropped) + len(rep.skipped))
         return rep

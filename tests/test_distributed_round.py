@@ -1,0 +1,198 @@
+"""Sharded rounds + dispatch coordinator: the bit-identity contracts.
+
+Sharding a round (repro.distributed.round) and merging several
+schedulers into one dispatch lane (repro.distributed.coordinator) are
+physical knobs: the Fig. 4 filter cases must produce byte-identical
+masks, call counts, and cluster logs at any shard count, and a
+kill-mid-run restart through the append-only log must replay at ~0
+oracle calls.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core import CSVConfig, SyntheticOracle, semantic_filter
+from repro.data import make_dataset
+from repro.distributed import DispatchCoordinator, shard_clusters
+from repro.service import FilterService
+
+N = 3000
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _run(ds, shards, vote="uni", query="RV-Q1", xi=0.005):
+    oracle = SyntheticOracle(ds.labels[query], flip_prob=0.02, seed=7,
+                             token_lens=ds.token_lens)
+    cfg = CSVConfig(n_clusters=4, xi=xi, vote=vote, shards=shards)
+    return semantic_filter(ds.embeddings, oracle, cfg), oracle
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("vote", ["uni", "sim"])
+@pytest.mark.parametrize("shards", [2, 3, 5])
+def test_sharded_round_bit_identical(ds, vote, shards):
+    """Fig. 4 cases: any shard count == single-host, byte for byte."""
+    r1, o1 = _run(ds, 1, vote)
+    rs, os_ = _run(ds, shards, vote)
+    assert (r1.mask == rs.mask).all()
+    assert r1.n_llm_calls == rs.n_llm_calls
+    assert r1.cluster_log == rs.cluster_log
+    assert r1.n_voted == rs.n_voted and r1.n_fallback == rs.n_fallback
+    assert r1.recluster_rounds == rs.recluster_rounds
+    # the oracle consumed the identical flip stream: per-id memo equal
+    assert o1.memo_snapshot() == os_.memo_snapshot()
+    # each round actually split: one oracle batch per (non-empty) shard,
+    # and the shard batches concatenate to the single-host batch
+    for rr1, rrs in zip(r1.round_log, rs.round_log):
+        assert rrs.shards >= 1 and rrs.shards <= shards
+        assert sum(rrs.oracle_batches) == sum(rr1.oracle_batches)
+    assert any(rr.shards > 1 for rr in rs.round_log)
+
+
+def test_sharded_round_through_policy(ds):
+    """ExecutionPolicy(shards=N) flows through Session.collect()."""
+    def collect(shards):
+        sess = Session(policy=ExecutionPolicy(n_clusters=4, xi=0.005,
+                                              shards=shards))
+        t = sess.table(embeddings=ds.embeddings, name="reviews")
+        o = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+                            token_lens=ds.token_lens)
+        r = t.filter(o, name="q").collect()
+        sess.close()
+        return r
+
+    r1, r3 = collect(1), collect(3)
+    assert (r1.mask == r3.mask).all()
+    assert r1.n_llm_calls == r3.n_llm_calls
+
+
+def test_shards_validation():
+    with pytest.raises(ValueError, match="shards"):
+        ExecutionPolicy(shards=0)
+    with pytest.raises(ValueError, match="executor"):
+        ExecutionPolicy(shards=2, executor="sequential")
+    with pytest.raises(ValueError, match="executor"):
+        semantic_filter(np.zeros((4, 2), np.float32),
+                        SyntheticOracle(np.zeros(4, bool)),
+                        CSVConfig(shards=2, executor="sequential"))
+
+
+def test_shard_clusters_contiguous_and_balanced():
+    @dataclasses.dataclass
+    class _CP:
+        n_sample: int
+
+    clusters = [_CP(n) for n in (5, 5, 5, 50, 5, 5, 5, 5, 50, 5)]
+    shards = shard_clusters(clusters, 3)
+    # partition: contiguous, complete, order-preserving
+    flat = [cp for s in shards for cp in s]
+    assert flat == clusters
+    assert 1 < len(shards) <= 3
+    # more shards than clusters degrades gracefully to one each
+    tiny = shard_clusters(clusters[:2], 8)
+    assert [cp for s in tiny for cp in s] == clusters[:2]
+    # single shard passes through
+    assert shard_clusters(clusters, 1) == [clusters]
+
+
+# ------------------------------------------------------------- coordinator
+def test_coordinator_merges_lanes_bit_identically(ds):
+    """Several schedulers feeding ONE dispatch lane: same masks as
+    serial collect, lanes accounted, detach on session close."""
+    def serial(query):
+        sess = Session(policy=ExecutionPolicy(n_clusters=4, xi=0.005))
+        t = sess.table(embeddings=ds.embeddings, name="reviews")
+        o = SyntheticOracle(ds.labels[query], flip_prob=0.02, seed=7,
+                            token_lens=ds.token_lens)
+        r = t.filter(o, name="q").collect()
+        sess.close()
+        return r
+
+    coord = DispatchCoordinator()
+    try:
+        sessions, tickets, want = [], [], []
+        for query in ("RV-Q1", "RV-Q3"):
+            sess = Session(policy=ExecutionPolicy(n_clusters=4, xi=0.005),
+                           coordinator=coord)
+            t = sess.table(embeddings=ds.embeddings, name="reviews")
+            o = SyntheticOracle(ds.labels[query], flip_prob=0.02, seed=7,
+                                token_lens=ds.token_lens)
+            with sess.scheduler.holding():
+                tickets.append(sess.scheduler.submit(
+                    t.filter(o, name="q")))
+            sessions.append(sess)
+            want.append(serial(query))
+        got = [tk.result() for tk in tickets]
+        for r, w in zip(got, want):
+            assert (r.mask == w.mask).all()
+            assert r.n_llm_calls == w.n_llm_calls
+        assert coord.n_attached == 2
+        stats = coord.stats()
+        assert len(stats) == 2
+        assert all(ls.n_waves > 0 for ls in stats.values())
+        for sess in sessions:
+            sess.close()
+        assert coord.n_attached == 0
+    finally:
+        coord.close()
+
+
+def test_coordinator_lane_rejects_use_after_close():
+    coord = DispatchCoordinator()
+    try:
+        lane = coord.attach(label="x")
+        lane.close()
+        lane.close()  # idempotent
+        with pytest.raises(RuntimeError):
+            lane.submit_call(lambda: None)
+    finally:
+        coord.close()
+
+
+# --------------------------------------------------- kill-mid-run restart
+def test_kill_mid_run_restart_replays_from_log(ds, tmp_path):
+    """Crash after some queries completed: restart = snapshot-load +
+    log-tail replay, and the completed work replays at ~0 oracle calls
+    without re-running k-means."""
+    def build():
+        sess = Session(policy=ExecutionPolicy(
+            n_clusters=4, xi=0.005, shards=2, log_dir=str(tmp_path),
+            log_compact_records=4))   # low threshold: force a compaction
+        t = sess.table(embeddings=ds.embeddings, name="reviews")
+        sess.register_oracle("A", SyntheticOracle(
+            ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+            token_lens=ds.token_lens))
+        sess.register_oracle("B", SyntheticOracle(
+            ds.labels["RV-Q3"], flip_prob=0.02, seed=7,
+            token_lens=ds.token_lens))
+        svc = FilterService(sess)
+        svc.register_tenant("t0", sess.policy)
+        return sess, t, svc
+
+    sess1, t1, svc1 = build()
+    rep0 = svc1.restore()          # fresh dir: nothing to replay
+    assert rep0 is None
+    (rA,) = svc1.gather(svc1.submit("t0", t1.filter("A")))
+    (rB,) = svc1.gather(svc1.submit("t0", t1.filter("B")))
+    assert svc1.log._gen >= 1      # thresholds forced >= 1 compaction
+    svc1.log.abandon()             # kill -9: no close, no final snapshot
+    sess1.close()
+
+    sess2, t2, svc2 = build()
+    rep = svc2.restore()
+    assert rep is not None and rep.n_dropped == 0
+    assert rep.snapshot is not None       # restart went through a snapshot
+    # the precluster replayed from snapshot/log — no k-means refit needed
+    assert sess2._assign_cache or t2._table._assign_cache
+    (r2A,) = svc2.gather(svc2.submit("t0", t2.filter("A")))
+    (r2B,) = svc2.gather(svc2.submit("t0", t2.filter("B")))
+    assert (r2A.mask == rA.mask).all() and (r2B.mask == rB.mask).all()
+    assert r2A.n_llm_calls == 0 and r2B.n_llm_calls == 0
+    assert sess2.stats.n_calls == 0
+    svc2.close()

@@ -1,0 +1,226 @@
+"""Append-only session log (repro.service.log): durability edge cases.
+
+Covers the WAL contracts docs/distributed.md promises: framed-record
+round-trip, torn-final-record truncate-and-recover, concurrent-writer
+rejection (lock file), compaction mid-stream equivalence against an
+un-compacted replay, and restart cost bounded by the log tail.
+"""
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core.oracle import SyntheticOracle
+from repro.data import make_dataset
+from repro.service import SessionStore
+from repro.service.log import (ConcurrentWriterError, LOG_MAGIC,
+                               SessionLogStore, pack_record, read_records)
+
+N = 900
+POL = ExecutionPolicy(n_clusters=24, xi=0.01, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _build(ds, extra=()):
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    sess.register_oracle("A", SyntheticOracle(
+        ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+        token_lens=ds.token_lens))
+    for name, labels in extra:
+        sess.register_oracle(name, SyntheticOracle(labels, flip_prob=0.0,
+                                                   seed=11))
+    return sess, t
+
+
+# ----------------------------------------------------------- frame codec
+def test_frame_roundtrip(tmp_path):
+    p = tmp_path / "wal_000000.log"
+    payloads = [{"t": "x", "i": 7, "arr": np.arange(6).reshape(2, 3)},
+                {"t": "y", "s": "text", "f": 0.25, "none": None}]
+    p.write_bytes(LOG_MAGIC + b"".join(pack_record(r) for r in payloads))
+    records, ends, valid_end, size = read_records(p)
+    assert valid_end == size == ends[-1]
+    assert records[0]["i"] == 7
+    assert (records[0]["arr"] == np.arange(6).reshape(2, 3)).all()
+    assert records[1] == payloads[1]
+
+
+def test_torn_final_record_truncate_and_recover(ds, tmp_path):
+    sess, t = _build(ds)
+    log = SessionLogStore(tmp_path)
+    log.attach(sess)
+    r1 = t.filter("A").collect()
+    log.abandon()
+    sess.close()
+
+    gen = sorted(tmp_path.glob("wal_*.log"))[-1]
+    intact = gen.stat().st_size
+    with open(gen, "ab") as fh:            # crash mid-append: half a frame
+        fh.write(pack_record({"t": "emb", "keys": [], "rows":
+                              np.zeros((0, 4), np.float32)})[:9])
+    sess2, t2 = _build(ds)
+    log2 = SessionLogStore(tmp_path)
+    rep = log2.restore(sess2)
+    assert rep.torn_bytes == gen.stat().st_size - intact > 0
+    log2.attach(sess2)                     # attach truncates the torn tail
+    assert gen.stat().st_size == intact
+    r2 = t2.filter("A").collect()
+    assert (r2.mask == r1.mask).all() and r2.n_llm_calls == 0
+    # recovered writer appends cleanly after the truncation point
+    records, _, valid_end, size = read_records(gen)
+    assert valid_end == size
+    log2.close()
+    sess2.close()
+
+
+def test_corrupt_frame_drops_suffix(tmp_path):
+    """A flipped byte mid-file: everything after the bad frame is
+    unreadable by design (no resync) — replay stops at the corruption."""
+    p = tmp_path / "wal_000000.log"
+    recs = [{"t": "x", "i": i} for i in range(5)]
+    frames = [pack_record(r) for r in recs]
+    blob = bytearray(LOG_MAGIC + b"".join(frames))
+    off = len(LOG_MAGIC) + len(frames[0]) + len(frames[1]) + 10
+    blob[off] ^= 0xFF
+    p.write_bytes(bytes(blob))
+    records, _, valid_end, size = read_records(p)
+    assert [r["i"] for r in records] == [0, 1]
+    assert valid_end < size
+
+
+# ------------------------------------------------------------------ lock
+def test_concurrent_writer_rejected(ds, tmp_path):
+    sess, t = _build(ds)
+    log = SessionLogStore(tmp_path)
+    log.attach(sess)
+    with pytest.raises(ConcurrentWriterError, match="live writer"):
+        SessionLogStore(tmp_path).attach(sess)
+    log.close()
+    sess.close()
+
+
+def test_stale_lock_of_dead_pid_is_stolen(ds, tmp_path):
+    # a kill -9'd writer leaves its lock behind; its pid is dead so the
+    # next attach steals the lock instead of refusing forever
+    (tmp_path / "wal.lock").write_text("999999999")
+    sess, t = _build(ds)
+    log = SessionLogStore(tmp_path)
+    log.attach(sess)
+    assert (tmp_path / "wal.lock").read_text() == str(os.getpid())
+    log.close()
+    sess.close()
+
+
+# ------------------------------------------------------------ compaction
+def test_compaction_mid_stream_equivalent_to_uncompacted(ds, tmp_path):
+    """Same event stream, with and without a compaction in the middle:
+    both restores must rebuild identical behavior (masks + zero calls)."""
+    big = make_dataset("imdb_review", n=N + 100, seed=0)
+    extra = [("C", big.labels["RV-Q1"]), ("D", big.labels["RV-Q3"])]
+
+    def run(dirname, compact_mid):
+        d = tmp_path / dirname
+        sess, t = _build(ds, extra=extra)
+        log = SessionLogStore(d)
+        log.attach(sess)
+        r1 = t.filter("A").collect()
+        t.append(embeddings=big.embeddings[N:])      # mutation record
+        r2 = t.filter("C").collect()
+        if compact_mid:
+            log.compact(sess)
+        r3 = t.filter("D").collect()                 # tail after snapshot
+        log.abandon()
+        sess.close()
+
+        sess2, t2 = _build(ds, extra=extra)          # base table only
+        log2 = SessionLogStore(d)
+        rep = log2.restore(sess2)
+        log2.attach(sess2)
+        # A's decision predates the append (its oracle only spans the base
+        # rows), so only the post-append predicates re-collect here
+        g2C = t2.filter("C").collect()
+        g2D = t2.filter("D").collect()
+        assert g2C.n_llm_calls == g2D.n_llm_calls == 0
+        assert len(t2) == N + 100
+        log2.close()
+        sess2.close()
+        return (r1.mask, r2.mask, r3.mask), (g2C.mask, g2D.mask), rep
+
+    live_c, restored_c, rep_c = run("compacted", compact_mid=True)
+    live_u, restored_u, rep_u = run("uncompacted", compact_mid=False)
+    for a, b in zip(live_c, live_u):
+        assert (a == b).all()              # compaction is invisible live
+    for live, back in ((live_c, restored_c), (live_u, restored_u)):
+        for a, b in zip(live[1:], back):
+            assert (a == b).all()          # ...and across a restart
+    # the compacted dir went through snapshot + carried mutations + tail;
+    # the uncompacted one replayed the whole log
+    assert rep_c.snapshot is not None and rep_c.n_carried_mutations == 1
+    assert rep_u.snapshot is None and rep_u.n_tail_records > 0
+
+
+def test_restart_cost_bounded_by_tail_not_session(ds, tmp_path):
+    """After compaction the tail is empty: a restart replays ~no records
+    even though the session accumulated many."""
+    sess, t = _build(ds)
+    log = SessionLogStore(tmp_path)
+    log.attach(sess)
+    t.filter("A").collect()
+    pre_compact = read_records(
+        sorted(tmp_path.glob("wal_*.log"))[-1])[0]
+    assert len(pre_compact) > 3            # the session did accumulate
+    log.compact(sess)
+    log.close(compact=False)
+    sess.close()
+
+    sess2, t2 = _build(ds)
+    log2 = SessionLogStore(tmp_path)
+    rep = log2.restore(sess2)
+    assert rep.snapshot is not None
+    assert rep.n_tail_records == 0         # bounded by tail, not history
+    log2.attach(sess2)
+    r = t2.filter("A").collect()
+    assert r.n_llm_calls == 0
+    log2.close()
+    sess2.close()
+
+
+def test_compaction_deletes_old_generations(ds, tmp_path):
+    sess, t = _build(ds)
+    log = SessionLogStore(tmp_path)
+    log.attach(sess)
+    t.filter("A").collect()
+    log.compact(sess)
+    log.compact(sess)
+    gens = sorted(tmp_path.glob("wal_*.log"))
+    assert len(gens) == 1 and gens[0].name == "wal_000002.log"
+    log.close()
+    sess.close()
+
+
+# ------------------------------------------- RestoreReport dropped surface
+def test_snapshot_restore_surfaces_save_time_drops(ds, tmp_path):
+    """Decisions of an anonymous (never-registered) oracle are dropped at
+    save; the load report must say so instead of staying silent."""
+    sess = Session(policy=POL)
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    anon = SyntheticOracle(ds.labels["RV-Q1"], flip_prob=0.02, seed=7,
+                           token_lens=ds.token_lens)
+    t.filter(anon, name="q").collect()     # memoized under an id(), no name
+    SessionStore(tmp_path).save(sess)
+    sess.close()
+
+    sess2 = Session(policy=POL)
+    sess2.table(embeddings=ds.embeddings, name="reviews")
+    rep = SessionStore(tmp_path).load(sess2)
+    assert rep.dropped                      # surfaced, not discarded
+    assert any("unregistered oracle" in d for d in rep.dropped)
+    assert "dropped at save" in str(rep)
+    sess2.close()
