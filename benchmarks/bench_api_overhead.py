@@ -12,6 +12,12 @@ synthetic oracle is the worst case for tracer overhead (no model compute
 to hide behind).  Contract: tracer-disabled (default ``NullTracer``) is
 the already-measured api path; tracer-enabled must stay within ~5% of it
 on these cases, with bit-identical masks and call counts.
+
+ISSUE 10 satellite: a fourth path runs traced WITH the audit knobs
+present but ``audit_rate=0`` (the default) — the shipped configuration
+for a monitored deployment that has not opted into auditing.  Contract:
+bit-identical masks and call counts vs. the plain api path, <5% wall
+overhead vs. the traced path (the audit gate is one float compare).
 """
 from __future__ import annotations
 
@@ -85,6 +91,16 @@ def main(small: bool = False):
 
         wall_traced, r_traced = best_of(traced_collect)
 
+        # audit knobs present, rate 0: the monitored-but-unaudited config
+        audit_off_policy = policy.replace(audit_rate=0.0, audit_seed=1)
+
+        def traced_audit_off(o):
+            with use_tracer(Tracer(metrics=MetricsRegistry())):
+                return handle.filter(o, name=q,
+                                     policy=audit_off_policy).collect()
+
+        wall_audit_off, r_audit_off = best_of(traced_audit_off)
+
         identical = bool((r_api.mask == r_direct.mask).all())
         extra_calls = r_api.n_llm_calls - r_direct.n_llm_calls
         overhead_s = wall_api - wall_direct
@@ -96,14 +112,25 @@ def main(small: bool = False):
             (f"{ds_name}/{q}: traced run changed call count "
              f"({r_traced.n_llm_calls} vs {r_api.n_llm_calls})")
         trace_pct = (wall_traced - wall_api) / max(wall_api, 1e-9) * 100
+        # ISSUE 10: audit-off must be invisible — identical work, and the
+        # rate gate costs nothing measurable on top of tracing
+        assert bool((r_audit_off.mask == r_api.mask).all()), \
+            f"{ds_name}/{q}: audit-off run changed the mask"
+        assert r_audit_off.n_llm_calls == r_api.n_llm_calls, \
+            (f"{ds_name}/{q}: audit-off run changed call count "
+             f"({r_audit_off.n_llm_calls} vs {r_api.n_llm_calls})")
+        audit_off_pct = ((wall_audit_off - wall_traced)
+                         / max(wall_traced, 1e-9) * 100)
         emit(f"api_overhead/{ds_name}/{q}",
              wall_api / max(1, r_api.n_llm_calls) * 1e6,
              f"direct_s={wall_direct:.3f};api_s={wall_api:.3f};"
              f"overhead_ms={overhead_s*1e3:.1f};overhead_pct={overhead_pct:.1f};"
              f"extra_oracle_calls={extra_calls};identical_mask={identical};"
-             f"traced_s={wall_traced:.3f};trace_overhead_pct={trace_pct:.1f}")
+             f"traced_s={wall_traced:.3f};trace_overhead_pct={trace_pct:.1f};"
+             f"audit_off_s={wall_audit_off:.3f};"
+             f"audit_off_pct={audit_off_pct:.1f}")
         rows.append((ds_name, q, wall_direct, wall_api, extra_calls,
-                     identical, wall_traced))
+                     identical, wall_traced, wall_audit_off))
     return rows
 
 

@@ -106,6 +106,20 @@ class ExecutionPolicy:
     log_dir: Optional[str] = None
     log_compact_bytes: int = 4 << 20
     log_compact_records: int = 10_000
+    # ---- online quality auditing (repro.obs.audit; docs/observability.md) --
+    # audit_rate: fraction of the table held out as a stratified, seeded
+    # audit sample after each collect(); the sample is labeled by the real
+    # oracle and compared against the CSV-voted mask.  Audit spend is
+    # accounted under ``audit.*`` metrics only — never ``oracle.*``, memo
+    # state, or the oracle's RNG stream — so the default 0.0 is bit-identical
+    # and auditing never perturbs the query it measures.  Excluded from
+    # to_csv_config()/the memo fingerprint (a pure observation knob).
+    audit_rate: float = 0.0
+    audit_seed: int = 0
+    audit_max_rows: int = 256
+    # audit_error_bound: tolerated disagreement rate before a cluster is
+    # flagged for re-vote/re-cluster; None derives epsilon (if set) else 0.05.
+    audit_error_bound: Optional[float] = None
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -125,6 +139,13 @@ class ExecutionPolicy:
         if self.vote not in (None, "uni", "sim"):
             raise ValueError(f"unknown vote {self.vote!r}; "
                              "expected 'uni' or 'sim'")
+        if not 0.0 <= self.audit_rate <= 1.0:
+            raise ValueError("audit_rate must be in [0, 1]")
+        if self.audit_max_rows < 1:
+            raise ValueError("audit_max_rows must be >= 1")
+        if self.audit_error_bound is not None and not (
+                0.0 < self.audit_error_bound < 1.0):
+            raise ValueError("audit_error_bound must be in (0, 1)")
 
     # ------------------------------------------------------------ derived
     @property

@@ -27,6 +27,7 @@ from repro.api.memo import ReuseView, oracle_identity
 from repro.api.policy import ExecutionPolicy, OracleBudgetError
 from repro.core.baselines import (BaselineResult, bargain_filter,
                                   lotus_filter, reference_filter)
+from repro.obs.audit import audit_query_result
 from repro.obs.trace import get_tracer
 from repro.plan.cost import est_oracle_calls
 from repro.plan.executor import PlanExecutor, PlanResult, PreparedPlan
@@ -62,6 +63,21 @@ class QueryResult:
     # optimizer NodeEstimate per leaf (physical order) captured at collect
     # time — the predictions profile() confronts with the observed truth
     node_estimates: list = dataclasses.field(default_factory=list)
+    # online audit outcome (repro.obs.audit.AuditReport) — populated only
+    # when the policy opted in via audit_rate > 0
+    audit: Any = None
+
+    def audit_report(self):
+        """The online quality audit for this result (docs/observability.md).
+
+        Requires the query to have run with ``ExecutionPolicy(audit_rate>0)``;
+        the default policy never audits (and never spends audit calls).
+        """
+        if self.audit is None:
+            raise ValueError(
+                "no audit attached: run with ExecutionPolicy(audit_rate=...) "
+                "> 0 to hold out a stratified audit sample at collect time")
+        return self.audit
 
     @property
     def pairs(self) -> np.ndarray:
@@ -464,6 +480,13 @@ class FilterQuery(Query):
             for proxy, before in proxy_snap:
                 self.session._absorb_proxy(proxy.stats.delta(before))
             res = self._to_result(pol, raw, monotonic() - t0, ests)
+            if pol.audit_rate > 0.0 and res.mask is not None:
+                # observation-only: audit spend lands under audit.* metrics
+                # and the report — oracle stats/memo/RNG are untouched, so
+                # the masks above (and every later query) stay bit-identical
+                with tr.span("audit", kind="audit", table=self.handle.name):
+                    res.audit = audit_query_result(self.handle, self.expr,
+                                                   pol, res.mask)
             qsp.set(calls=res.n_llm_calls, n_replayed=res.n_replayed)
             tr.metrics.inc("query.collects")
         return res

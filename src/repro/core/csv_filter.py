@@ -163,6 +163,18 @@ def plan_round(queue: list, rng: np.random.Generator, xi: float,
     return RoundPlan(depth=depth, clusters=clusters)
 
 
+def _observe_vote_margin(score: float, lb: float, ub: float) -> None:
+    """Export how close a cluster's vote score sat to its decision band.
+
+    A collapsing margin (scores hugging lb/ub) means votes are barely
+    decided — the health monitor alerts on the distribution
+    (``quality.vote_margin``).  Observation-only: the ambient registry is a
+    no-op ``NullRegistry`` unless a tracer is installed.
+    """
+    get_tracer().metrics.observe("quality.vote_margin",
+                                 min(abs(score - lb), abs(ub - score)))
+
+
 def _vote_wave(wave: list, labels_by_cluster: list, emb: np.ndarray,
                cfg: CSVConfig, lb: float, ub: float):
     """One segmented voting dispatch for every non-exhausted wave cluster."""
@@ -291,9 +303,11 @@ def _run_round_executor(emb, oracle, cfg, rng, xi, result, decided,
                             if len(vr.undetermined):
                                 undetermined.append(
                                     cp.rest_ids[vr.undetermined])
+                            score = float(np.mean(labels))
+                            _observe_vote_margin(score, lb, ub)
                             cluster_log.append({
                                 "size": cp.size, "sampled": cp.n_sample,
-                                "score": float(np.mean(labels)),
+                                "score": score,
                                 "voted": int(voted),
                                 "undetermined": int(len(vr.undetermined)),
                                 "depth": depth,
@@ -374,9 +388,11 @@ def _run_sequential_executor(emb, oracle, cfg, rng, xi, result, decided,
                 n_voted += len(vr.decided_true) + len(vr.decided_false)
                 if len(vr.undetermined):
                     undetermined.append(rest_ids[vr.undetermined])
+                score = float(np.mean(labels))
+                _observe_vote_margin(score, lb, ub)
                 cluster_log.append({
                     "size": m, "sampled": n_sample,
-                    "score": float(np.mean(labels)),
+                    "score": score,
                     "voted": int(len(vr.decided_true)
                                  + len(vr.decided_false)),
                     "undetermined": int(len(vr.undetermined)),

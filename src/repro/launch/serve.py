@@ -29,8 +29,10 @@ from repro.core.operators import accuracy_f1
 from repro.data import make_dataset, HashTokenizer
 from repro.embeddings import EmbeddingModel
 from repro.models import lm
-from repro.obs import (MetricsRegistry, Tracer, registry_to_prometheus,
-                       set_tracer, write_run_profile)
+from repro.obs import (FlightRecorder, HealthMonitor, LogAlertSink,
+                       MetricsRegistry, StatusHub, Tracer, default_rules,
+                       set_flight_recorder, set_monitor, set_tracer,
+                       start_status_server, write_run_profile)
 from repro.serving import ServingEngine
 
 SERVICE_PREDICATES = [
@@ -41,34 +43,18 @@ SERVICE_PREDICATES = [
 ]
 
 
-def start_metrics_server(registry: MetricsRegistry, port: int):
-    """Prometheus-style text endpoint on a daemon thread (stdlib only).
+def start_metrics_server(registry: MetricsRegistry, port: int,
+                         host: str = "127.0.0.1", hub: StatusHub = None,
+                         label: str = "serve"):
+    """Live observability endpoints on a daemon thread (stdlib only).
 
-    GET /metrics (or any path) returns the live registry dump; scrape it
-    while a long serve run is in flight.  Returns the server object so
-    callers/tests can ``shutdown()`` it.
+    /metrics serves the Prometheus dump (the historical scrape target);
+    /healthz, /statusz, /varz come from ``repro.obs.status``.  Binds
+    loopback by default — pass ``host="0.0.0.0"`` explicitly to expose the
+    listener.  Returns the server so callers/tests can ``shutdown()`` it.
     """
-    import http.server
-    import threading
-
-    class Handler(http.server.BaseHTTPRequestHandler):
-        def do_GET(self):  # noqa: N802 - http.server API
-            body = registry_to_prometheus(registry).encode()
-            self.send_response(200)
-            self.send_header("Content-Type", "text/plain; version=0.0.4")
-            self.send_header("Content-Length", str(len(body)))
-            self.end_headers()
-            self.wfile.write(body)
-
-        def log_message(self, *a):  # quiet: no per-scrape stderr spam
-            pass
-
-    srv = http.server.ThreadingHTTPServer(("0.0.0.0", port), Handler)
-    threading.Thread(target=srv.serve_forever, daemon=True,
-                     name="metrics-server").start()
-    print(f"[serve] metrics at http://localhost:{srv.server_address[1]}"
-          "/metrics")
-    return srv
+    return start_status_server(registry, port, host=host, hub=hub,
+                               label=label)
 
 
 def export_trace(trace_dir: str, tracer: Tracer, registry: MetricsRegistry,
@@ -85,7 +71,8 @@ def export_trace(trace_dir: str, tracer: Tracer, registry: MetricsRegistry,
 
 def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
                      pipeline_depth: int = 1, shards: int = 1,
-                     log_dir: str = None):
+                     log_dir: str = None, hub: StatusHub = None,
+                     flight: FlightRecorder = None):
     """K predicates through the concurrent service over one engine."""
     from repro.api import ExecutionPolicy, Session
     from repro.service import FilterService
@@ -121,12 +108,23 @@ def serve_concurrent(engine, tok, ds, embeddings, k: int, state_dir: str,
                 print(f"[serve] WARNING: {n_dropped} entry(ies) did not "
                       "survive the restart (see report above)")
     service.register_tenant("default", sess.policy)
+    if hub is not None:
+        # statusz sections come live as soon as the service exists
+        hub.add_provider("tenants", service.status_view)
+        hub.add_provider("scheduler", sess.scheduler.status_view)
+        if service.log is not None:
+            hub.add_provider("log", service.log.tail_summary)
     # exit-mode shutdown: SIGINT/SIGTERM writes a final session checkpoint
     # (best-effort mid-run — whatever rounds completed are memoized and
     # replay on restart) before exiting 128+signum; the normal path fires
     # the same once-only checkpoint via shutdown.close() below
     shutdown = GracefulShutdown(exit_on_signal=True).install()
     shutdown.register("service-checkpoint", service.checkpoint)
+    if flight is not None:
+        flight.attach_policy(sess.policy)
+        if service.log is not None:
+            flight.attach_log(service.log)
+        flight.install(shutdown=shutdown)  # signal-only dump + excepthook
     with sess.scheduler.holding():
         tickets = [service.submit("default", table.filter(f"p{i}"),
                                   label=f"p{i}") for i in range(k)]
@@ -187,19 +185,46 @@ def main():
                          "trace.json, ticks.jsonl, metrics.prom and "
                          "metrics.json under DIR on exit")
     ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
-                    help="serve live Prometheus-style /metrics on PORT "
-                         "(0 = off)")
+                    help="serve live /metrics, /healthz, /statusz and "
+                         "/varz on PORT (0 = off)")
+    ap.add_argument("--metrics-host", default="127.0.0.1", metavar="HOST",
+                    help="bind address for --metrics-port (default "
+                         "loopback; pass 0.0.0.0 to expose)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: dump a debug bundle "
+                         "under DIR on unhandled exception, fatal signal, "
+                         "or critical health alert")
+    ap.add_argument("--linger", type=float, default=0.0, metavar="SECONDS",
+                    help="keep the process (and status endpoints) alive "
+                         "SECONDS after the run completes")
+    ap.add_argument("--inject-failure", action="store_true",
+                    help="raise after the run completes (CI: exercises "
+                         "the flight recorder's crash path)")
     args = ap.parse_args()
 
     registry = MetricsRegistry()
     tracer = None
-    if args.trace_dir or args.metrics_port:
+    monitor = None
+    flight = None
+    hub = None
+    if args.trace_dir or args.metrics_port or args.flight_dir:
         # live metrics need the tracer installed even when only --metrics-port
         # is given: instrumented code publishes through get_tracer().metrics
         tracer = Tracer(metrics=registry)
         set_tracer(tracer)
+        monitor = HealthMonitor(registry, rules=default_rules(),
+                                sinks=[LogAlertSink("[serve][health]")])
+        set_monitor(monitor)
+    if args.flight_dir:
+        flight = FlightRecorder(args.flight_dir, tracer=tracer,
+                                registry=registry)
+        flight.install()           # excepthook now; signal hook in-service
+        set_flight_recorder(flight)
+        monitor.add_sink(flight.note_alert)  # critical alerts dump too
     if args.metrics_port:
-        start_metrics_server(registry, args.metrics_port)
+        hub = StatusHub(monitor=monitor, flight=flight)
+        start_metrics_server(registry, args.metrics_port,
+                             host=args.metrics_host, hub=hub)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn_impl:
@@ -216,11 +241,13 @@ def main():
         sess, results = serve_concurrent(
             engine, tok, ds, embeddings, args.service,
             args.state_dir, pipeline_depth=args.pipeline_depth,
-            shards=args.shards, log_dir=args.log_dir)
+            shards=args.shards, log_dir=args.log_dir, hub=hub,
+            flight=flight)
         if tracer is not None and args.trace_dir:
             print(results[0].profile())
             export_trace(args.trace_dir, tracer, registry,
                          sess.scheduler.stats, engine.batcher)
+        _epilogue(args, flight)
         return
 
     oracle = ModelOracle(engine, tok, args.predicate, ds.texts)
@@ -241,6 +268,29 @@ def main():
     if tracer is not None and args.trace_dir:
         export_trace(args.trace_dir, tracer, registry,
                      getattr(oracle, "stats", None), engine.batcher)
+    _epilogue(args, flight)
+
+
+def _epilogue(args, flight):
+    """Post-run hold/failure hooks shared by both serve modes."""
+    if args.linger > 0:
+        import time
+        from repro.obs import get_monitor
+        from repro.utils.timing import monotonic
+        print(f"[serve] lingering {args.linger:g}s for live scrapes")
+        end = monotonic() + args.linger
+        try:
+            while monotonic() < end:
+                time.sleep(0.5)
+                get_monitor().maybe_evaluate()
+                if flight is not None:
+                    flight.record_delta()
+        except KeyboardInterrupt:
+            pass
+    if args.inject_failure:
+        # deliberately crash AFTER the workload so the flight recorder's
+        # excepthook path is exercised with a real span/metric history
+        raise RuntimeError("injected failure (--inject-failure)")
 
 
 if __name__ == "__main__":

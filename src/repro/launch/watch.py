@@ -26,7 +26,9 @@ import numpy as np
 from repro.api import ExecutionPolicy, Session
 from repro.core import SyntheticOracle
 from repro.data import make_dataset
-from repro.obs import MetricsRegistry, Tracer, set_tracer
+from repro.obs import (FlightRecorder, HealthMonitor, LogAlertSink,
+                       MetricsRegistry, StatusHub, Tracer, default_rules,
+                       set_flight_recorder, set_monitor, set_tracer)
 from repro.service.lifecycle import GracefulShutdown
 from repro.service.store import SessionStore
 from repro.stream import (JsonlSink, RateBudget, StreamWatcher,
@@ -120,20 +122,46 @@ def main():
     ap.add_argument("--attn-impl", default=None,
                     choices=["auto", "plain", "chunked", "tri", "flash",
                              "flash-ref"])
-    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT")
+    ap.add_argument("--metrics-port", type=int, default=0, metavar="PORT",
+                    help="serve live /metrics, /healthz, /statusz and "
+                         "/varz on PORT (0 = off)")
+    ap.add_argument("--metrics-host", default="127.0.0.1", metavar="HOST",
+                    help="bind address for --metrics-port (default "
+                         "loopback; pass 0.0.0.0 to expose)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: dump a debug bundle "
+                         "under DIR on unhandled exception, fatal signal, "
+                         "or critical health alert")
     ap.add_argument("--trace-dir", default=None, metavar="DIR")
     args = ap.parse_args()
 
     registry = MetricsRegistry()
     tracer = None
-    if args.trace_dir or args.metrics_port:
+    monitor = None
+    flight = None
+    hub = None
+    if args.trace_dir or args.metrics_port or args.flight_dir:
         tracer = Tracer(metrics=registry)
         set_tracer(tracer)
+        monitor = HealthMonitor(registry, rules=default_rules(),
+                                sinks=[LogAlertSink("[watch][health]")])
+        set_monitor(monitor)
+    if args.flight_dir:
+        flight = FlightRecorder(args.flight_dir, tracer=tracer,
+                                registry=registry)
+        flight.install()
+        set_flight_recorder(flight)
+        monitor.add_sink(flight.note_alert)
     if args.metrics_port:
         from repro.launch.serve import start_metrics_server
-        start_metrics_server(registry, args.metrics_port)
+        hub = StatusHub(monitor=monitor, flight=flight)
+        start_metrics_server(registry, args.metrics_port,
+                             host=args.metrics_host, hub=hub,
+                             label="watch")
 
     sess, watcher = build_watcher(args)
+    if hub is not None:
+        hub.add_provider("stream", watcher.status_view)
 
     resumed = False
     if watcher.has_checkpoint():
@@ -147,6 +175,8 @@ def main():
     # watcher writes its final checkpoint and flushes every sink
     shutdown = GracefulShutdown(exit_on_signal=False).install()
     shutdown.register("watch-shutdown", watcher.shutdown)
+    if flight is not None:
+        flight.install(shutdown=shutdown)  # signal-triggered dumps only
     try:
         while not watcher.drained and not shutdown.requested:
             summary = watcher.tick()

@@ -95,24 +95,34 @@ def _prom_name(name: str) -> str:
 
 
 def registry_to_prometheus(registry) -> str:
-    """Prometheus text exposition format (type comments + samples)."""
+    """Prometheus text exposition format (HELP/TYPE comments + samples)."""
     lines: List[str] = []
     for name, m in registry._iter_instruments():
         pname = _prom_name(name)
+        lines.append(f"# HELP {pname} repro metric {name}")
         if m.kind == "histogram":
             lines.append(f"# TYPE {pname} histogram")
             cum = 0
             for bound, c in zip([*m.bounds, float("inf")], m.counts):
                 cum += c
-                le = "+Inf" if bound == float("inf") else repr(bound)
+                le = "+Inf" if bound == float("inf") else format(bound, "g")
                 lines.append(f'{pname}_bucket{{le="{le}"}} {cum}')
             lines.append(f"{pname}_sum {m.sum}")
             lines.append(f"{pname}_count {m.count}")
         else:
+            try:
+                value = float(m.value)
+            except (TypeError, ValueError):
+                # non-numeric gauge (someone .set() a string): expose it
+                # through the info idiom rather than crashing the scrape
+                lines.append(f"# TYPE {pname} gauge")
+                lines.append(f'{pname}{{value="{m.value}"}} 1')
+                continue
             lines.append(f"# TYPE {pname} {m.kind}")
-            lines.append(f"{pname} {float(m.value)}")
+            lines.append(f"{pname} {value}")
     for name, v in registry._iter_info():
         pname = _prom_name(name)
+        lines.append(f"# HELP {pname} repro info {name}")
         lines.append(f"# TYPE {pname} gauge")
         lines.append(f'{pname}{{value="{v}"}} 1')
     return "\n".join(lines) + ("\n" if lines else "")

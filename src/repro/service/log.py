@@ -626,6 +626,25 @@ class SessionLogStore:
                 raise LogCorruptionError(msg)
             rep.skipped.append(msg)
 
+    # ------------------------------------------------------------- status
+    def tail_summary(self) -> dict:
+        """WAL tail at a glance (statusz / flight-recorder bundle): which
+        generation is live, how far the writer has advanced, and how much
+        has accumulated since the last compaction."""
+        with self._lock:
+            return {
+                "dir": str(self.dir),
+                "generation": self._gen,
+                "attached": self._writer is not None,
+                "tail_offset": (self._writer.offset
+                                if self._writer is not None else None),
+                "bytes_since_compaction": self._bytes_since,
+                "records_since_compaction": self._records_since,
+                "compact_due": (self._bytes_since >= self.compact_bytes
+                                or self._records_since
+                                >= self.compact_records),
+            }
+
     # --------------------------------------------------------- compaction
     @property
     def compact_due(self) -> bool:
@@ -669,7 +688,12 @@ class SessionLogStore:
                     pass
             self._bytes_since = 0
             self._records_since = 0
-        get_tracer().metrics.inc("log.compactions")
+        m = get_tracer().metrics
+        m.inc("log.compactions")
+        # mark the compaction point so health rules can alert on WAL bytes
+        # written since (counter_delta("log.bytes", "log.last_compaction_bytes"))
+        m.set("log.last_compaction_bytes",
+              getattr(m.counter("log.bytes"), "value", 0.0))
 
     def compact_if_due(self, session=None) -> bool:
         if self.compact_due:

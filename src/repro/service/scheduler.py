@@ -49,6 +49,7 @@ import numpy as np
 from repro.api.memo import oracle_identity
 from repro.api.query import FilterQuery, JoinQuery
 from repro.core.oracle import AsyncOracleDispatcher, evaluate_packed
+from repro.obs.health import get_monitor
 from repro.obs.trace import get_tracer
 from repro.plan.expr import And, Expr, Not, Or, Pred
 from repro.serving.batcher import DispatchMergeStats
@@ -461,11 +462,32 @@ class QueryScheduler:
         tr.metrics.inc("service.ticks")
         tr.metrics.observe("service.wave_wall_s", wall)
         tr.metrics.set("service.batch_fill", self.stats.merge.merge_factor)
+        # the dispatch tick is the service's natural heartbeat: evaluate
+        # health rules here (rate-limited inside; no-op null default)
+        get_monitor().maybe_evaluate()
         for r, out in zip(wave, outcomes):
             if isinstance(out, BaseException):
                 r.future.set_exception(out)
             else:
                 r.future.set_result(out)
+
+    # ------------------------------------------------------------- status
+    def status_view(self) -> dict:
+        """statusz section: in-flight work and lifetime tick counters."""
+        with self._cv:
+            in_flight = len(self._running)
+            deferred = len(self._deferred)
+        return {
+            "in_flight": in_flight,
+            "deferred": deferred,
+            "idle": self.idle.is_set(),
+            "submitted": self.stats.n_submitted,
+            "completed": self.stats.n_completed,
+            "failed": self.stats.n_failed,
+            "dispatch_ticks": self.stats.n_dispatch_ticks,
+            "mean_batch_size": self.stats.merge.mean_batch_size,
+            "merge_factor": self.stats.merge.merge_factor,
+        }
 
     # ------------------------------------------------------------ control
     @contextlib.contextmanager

@@ -20,6 +20,7 @@ import threading
 from typing import Dict, List, Optional
 
 from repro.api.policy import ExecutionPolicy, OracleBudgetError
+from repro.obs.trace import get_tracer
 from repro.service.scheduler import QueryTicket
 from repro.service.store import RestoreReport, SessionStore
 
@@ -140,6 +141,7 @@ class FilterService:
                     f"{acct.reserved:.0f} reserved)")
             acct.reserved += est
             acct.n_admitted += 1
+            self._export_budget_gauge_locked()
         try:
             ticket = self.scheduler.submit(query, policy=pol,
                                            label=label or f"{tenant}/q")
@@ -166,10 +168,40 @@ class FilterService:
                 acct.reserved = max(0.0, acct.reserved - est)
                 if future.exception() is None:
                     acct.spent += int(future.result().n_llm_calls)
+                self._export_budget_gauge_locked()
         with self._lock:
             self._settlers[ticket.index] = _settle
         ticket.add_done_callback(_settle)
         return ticket
+
+    def _export_budget_gauge_locked(self) -> None:
+        """Export the worst (max) tenant budget-burn ratio as a gauge so
+        the health monitor's ``tenant-budget-burn`` rule can alert before
+        admissions start bouncing.  No-op under the null registry."""
+        used = [
+            (acct.spent + acct.reserved) / acct.budget
+            for acct in self._tenants.values()
+            if acct.budget is not None and acct.budget > 0
+        ]
+        if used:
+            get_tracer().metrics.set("service.tenant_budget_used_ratio",
+                                     max(used))
+
+    def status_view(self) -> Dict[str, dict]:
+        """statusz section: per-tenant budgets and admission counters."""
+        with self._lock:
+            tenants = {
+                name: {
+                    "budget": acct.budget,
+                    "spent": acct.spent,
+                    "reserved": acct.reserved,
+                    "remaining": acct.remaining,
+                    "admitted": acct.n_admitted,
+                    "rejected": acct.n_rejected,
+                }
+                for name, acct in self._tenants.items()
+            }
+        return tenants
 
     def gather(self, *tickets) -> List:
         """Wait for tickets (all outstanding when none given).  Budget

@@ -41,6 +41,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.obs.flight import get_flight_recorder
+from repro.obs.health import get_monitor
 from repro.obs.trace import get_tracer
 from repro.stream.delta import DeltaTracker, row_key
 from repro.stream.sinks import Sink, SinkRunner, StdoutSink
@@ -264,18 +266,57 @@ class StreamWatcher:
             self.stats.n_ticks += 1
             self.stats.n_oracle_calls += calls
             self.stats.n_notifications += notified
+            backlog = sum(s.backlog for s, _ in self._sources)
             tr.metrics.inc("stream.ticks")
             tr.metrics.inc("stream.rows_ingested", n_ing)
             tr.metrics.inc("stream.oracle_calls", calls)
             tr.metrics.inc("stream.notifications", notified)
+            # tick lag: rows the budgeted sources are still holding back —
+            # a growing gauge means ticks are not draining arrivals
+            tr.metrics.set("stream.tick_lag_rows", backlog)
+            if tr.enabled and n_ing:
+                self._export_centroid_drift(n_ing, tr)
             sp.set(rows=n_ing, oracle_calls=calls, notified=notified,
                    n_rows=0 if self.handle is None else len(self.handle))
+        # health heartbeat + flight-recorder metric deltas (null defaults)
+        get_monitor().maybe_evaluate()
+        fr = get_flight_recorder()
+        if fr is not None:
+            fr.record_delta()
         if (self.checkpoint_every and self.store is not None
                 and self._tick % self.checkpoint_every == 0):
             self.checkpoint()
         return {"tick": self._tick, "rows": n_ing, "oracle_calls": calls,
-                "notified": notified,
-                "backlog": sum(s.backlog for s, _ in self._sources)}
+                "notified": notified, "backlog": backlog}
+
+    def _export_centroid_drift(self, n_new: int, tr) -> None:
+        """Relative distance between this tick's new rows and the table's
+        running mean embedding.  The stream table's cluster centroids are
+        frozen at creation (docs/streaming.md), so sustained drift means
+        the 4-way partition is degrading — the ``stream-centroid-drift``
+        health rule alerts on this gauge."""
+        if self.handle is None:
+            return
+        emb = self.handle._table._embeddings
+        if emb is None or len(emb) == 0 or n_new > len(emb):
+            return
+        center = emb.mean(axis=0)
+        drift = float(np.linalg.norm(emb[-n_new:].mean(axis=0) - center)
+                      / (np.linalg.norm(center) + 1e-9))
+        tr.metrics.set("stream.centroid_drift", drift)
+
+    def status_view(self) -> dict:
+        """statusz section: tick progress, backlog, per-query delivery."""
+        return {
+            "tick": self._tick,
+            "n_rows": 0 if self.handle is None else len(self.handle),
+            "backlog": sum(s.backlog for s, _ in self._sources),
+            "drained": self.drained,
+            "ticks": self.stats.n_ticks,
+            "oracle_calls": self.stats.n_oracle_calls,
+            "notifications": self.stats.n_notifications,
+            "queries": sorted(self._queries),
+        }
 
     @property
     def drained(self) -> bool:

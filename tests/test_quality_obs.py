@@ -1,0 +1,305 @@
+"""Quality & health observability (ISSUE 10 acceptance criteria).
+
+Hard contracts:
+1. auditing is observation-only: ``audit_rate=0`` (the default) is
+   bit-identical to an audited run — same masks, same oracle call
+   counts, same memo size — and an audited FIRST query does not perturb
+   a later un-audited query (independent RNG streams);
+2. audit spend is separate: fresh audit labels land under ``audit.calls``
+   and never touch ``oracle.calls`` or the oracle's own stats/memo;
+3. the Wilson interval covers the true accuracy on synthetic ground
+   truth (flip=0 so oracle labels ARE ground truth);
+4. health rules trip exactly once per breach edge and emit a recover on
+   the way back;
+5. the live status endpoints (/healthz, /statusz, /varz, /metrics)
+   answer over real HTTP;
+6. the flight recorder dumps a parseable debug bundle;
+7. the Prometheus exporter writes # HELP lines, %g-formatted ``le``
+   labels, and survives non-numeric gauges.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.api import ExecutionPolicy, Session
+from repro.core import SyntheticOracle
+from repro.obs import (FlightRecorder, HealthMonitor, HealthRule,
+                       JsonlAlertSink, MetricsRegistry, StatusHub, Tracer,
+                       default_rules, registry_to_prometheus,
+                       set_flight_recorder, set_monitor,
+                       start_status_server, use_tracer, wilson_interval)
+
+N = 600
+POL = ExecutionPolicy(n_clusters=4, xi=0.005)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset("imdb_review", n=N, seed=0)
+
+
+def _oracle(ds, q="RV-Q1", flip=0.02, seed=7):
+    return SyntheticOracle(ds.labels[q], flip_prob=flip, seed=seed,
+                           token_lens=ds.token_lens)
+
+
+def _run(ds, audit_rate, flip=0.02, tracer=None):
+    sess = Session(policy=POL.replace(audit_rate=audit_rate))
+    t = sess.table(embeddings=ds.embeddings, name="reviews")
+    o = _oracle(ds, flip=flip)
+    sess.register_oracle("q", o)
+    if tracer is not None:
+        with use_tracer(tracer):
+            res = t.filter("q").collect()
+    else:
+        res = t.filter("q").collect()
+    return res, o
+
+
+# ------------------------------------------------------- wilson interval
+def test_wilson_interval_basics():
+    lo, hi = wilson_interval(90, 100)
+    assert 0.0 <= lo < 0.9 < hi <= 1.0
+    # degenerate inputs stay in [0, 1] and never crash
+    assert wilson_interval(0, 0) == (0.0, 1.0)
+    lo0, hi0 = wilson_interval(0, 50)
+    assert lo0 == 0.0 and hi0 > 0.0
+    loa, hia = wilson_interval(50, 50)
+    assert loa < 1.0 and hia == 1.0
+    # wider n -> tighter interval at the same rate
+    lo_n, hi_n = wilson_interval(900, 1000)
+    assert hi_n - lo_n < hi - lo
+
+
+def test_wilson_interval_covers_true_accuracy(ds):
+    # flip=0: the oracle IS the ground truth, so the query mask equals
+    # the truth and the audited accuracy estimate must cover it
+    tr = Tracer(metrics=MetricsRegistry())
+    res, _ = _run(ds, audit_rate=0.4, flip=0.0, tracer=tr)
+    truth = ds.labels["RV-Q1"].astype(bool)
+    true_acc = float(np.mean(res.mask == truth))
+    rep = res.audit_report()
+    assert rep.n_audited > 0
+    assert rep.accuracy_lo <= true_acc <= rep.accuracy_hi
+    assert 0.0 <= rep.f1_lo <= rep.f1 <= rep.f1_hi <= 1.0
+    # the report renders
+    assert "accuracy" in str(rep)
+
+
+# ----------------------------------------------- audit-off bit-identity
+def test_audit_off_bit_identical(ds):
+    res_off, o_off = _run(ds, audit_rate=0.0)
+    tr = Tracer(metrics=MetricsRegistry())
+    res_on, o_on = _run(ds, audit_rate=0.3, tracer=tr)
+    np.testing.assert_array_equal(res_off.mask, res_on.mask)
+    assert res_off.n_llm_calls == res_on.n_llm_calls
+    assert o_off.stats.n_calls == o_on.stats.n_calls
+    assert len(o_off._memo) == len(o_on._memo)  # audit never fills memo
+    # no audit attached when off
+    with pytest.raises(ValueError, match="no audit attached"):
+        res_off.audit_report()
+
+
+def test_audited_first_query_does_not_perturb_second(ds):
+    # the audit draws labels through the oracle's RNG (flip>0) — state
+    # save/restore means a LATER query sees identical flips either way
+    def pair(audit_first):
+        sess = Session(policy=POL)
+        t = sess.table(embeddings=ds.embeddings, name="reviews")
+        o1 = _oracle(ds, "RV-Q1", flip=0.05, seed=7)
+        sess.register_oracle("q", o1)
+        pol1 = POL.replace(audit_rate=0.3) if audit_first else POL
+        if audit_first:
+            tr = Tracer(metrics=MetricsRegistry())
+            with use_tracer(tr):
+                r1 = t.filter("q").collect(policy=pol1)
+        else:
+            r1 = t.filter("q").collect(policy=pol1)
+        o2 = _oracle(ds, "RV-Q2", flip=0.05, seed=9)
+        sess.register_oracle("q2", o2)
+        r2 = t.filter("q2").collect()
+        return r1, r2
+
+    a1, a2 = pair(True)
+    b1, b2 = pair(False)
+    np.testing.assert_array_equal(a1.mask, b1.mask)
+    np.testing.assert_array_equal(a2.mask, b2.mask)
+    assert a2.n_llm_calls == b2.n_llm_calls
+
+
+def test_audit_spend_separate_from_oracle(ds):
+    tr = Tracer(metrics=MetricsRegistry())
+    res, o = _run(ds, audit_rate=0.3, tracer=tr)
+    snap = tr.metrics.snapshot()
+    n_fresh = snap.get("audit.calls", 0.0)
+    n_memo = snap.get("audit.cached", 0.0)
+    assert n_fresh + n_memo > 0          # the audit did sample rows
+    assert snap["oracle.calls"] == o.stats.n_calls  # untouched by audit
+    assert snap["quality.audited_rows"] == n_fresh + n_memo
+    rep = res.audit_report()
+    assert rep.n_audited == n_fresh + n_memo
+    assert rep.n_fresh_calls == n_fresh and rep.n_memo_hits == n_memo
+    # vote-margin export rides the same traced run
+    assert snap["quality.vote_margin"]["count"] > 0
+
+
+# ------------------------------------------------------- health monitor
+def test_alert_trips_once_per_breach_and_recovers():
+    reg = MetricsRegistry()
+    reg.counter("oracle.calls").inc(100)
+    alerts = []
+    mon = HealthMonitor(
+        reg,
+        rules=[HealthRule(name="too-many-calls", metric="oracle.calls",
+                          threshold=150.0, op=">", severity="warning",
+                          message="call budget runs hot")],
+        sinks=[], min_interval_s=0.0)
+    mon.add_sink(alerts.append)
+    mon.evaluate()
+    assert alerts == [] and mon.status()["status"] == "ok"
+    reg.counter("oracle.calls").inc(100)          # 200 > 150: breach
+    mon.evaluate()
+    mon.evaluate()
+    mon.evaluate()                                 # still breached: silent
+    breaches = [a for a in alerts if a.kind == "breach"]
+    assert len(breaches) == 1
+    assert breaches[0].rule == "too-many-calls"
+    assert mon.status()["status"] == "degraded"
+    assert "too-many-calls" in mon.firing()
+    reg.counter("oracle.calls").value = 10.0       # back under: recover
+    mon.evaluate()
+    kinds = [a.kind for a in alerts]
+    assert kinds == ["breach", "recover"]
+    assert mon.status()["status"] == "ok"
+    reg.counter("oracle.calls").inc(500)           # re-breach: new alert
+    mon.evaluate()
+    assert [a.kind for a in alerts] == ["breach", "recover", "breach"]
+
+
+def test_default_rules_quiet_on_empty_registry():
+    mon = HealthMonitor(MetricsRegistry(), rules=default_rules(),
+                        sinks=[], min_interval_s=0.0)
+    mon.evaluate()                 # absent metrics never fire
+    assert not any(mon.firing().values())
+    assert mon.status()["status"] == "ok"
+
+
+def test_jsonl_alert_sink_and_critical_hook(tmp_path):
+    reg = MetricsRegistry()
+    reg.set("service.tenant_budget_used_ratio", 0.95)
+    crit = []
+    mon = HealthMonitor(reg, rules=default_rules(), sinks=[
+        JsonlAlertSink(tmp_path / "alerts.jsonl")],
+        min_interval_s=0.0, on_critical=crit.append)
+    mon.evaluate()
+    lines = (tmp_path / "alerts.jsonl").read_text().splitlines()
+    assert len(lines) == 1
+    doc = json.loads(lines[0])
+    assert doc["rule"] == "tenant-budget-burn"
+    assert doc["severity"] == "critical" and doc["kind"] == "breach"
+    assert len(crit) == 1
+    assert mon.status()["status"] == "critical"
+
+
+# ------------------------------------------------------ status endpoints
+def test_status_endpoints_live(ds):
+    reg = MetricsRegistry()
+    reg.counter("oracle.calls").inc(42)
+    mon = HealthMonitor(reg, rules=default_rules(), sinks=[],
+                        min_interval_s=0.0)
+    hub = StatusHub(monitor=mon)
+    hub.add_provider("tenants", lambda: {"alice": {"budget": 100}})
+    srv = start_status_server(reg, 0, hub=hub, label="test")
+    host, port = srv.server_address[:2]
+    base = f"http://{host}:{port}"
+    try:
+        def get(path, headers=None):
+            req = urllib.request.Request(base + path,
+                                         headers=headers or {})
+            with urllib.request.urlopen(req, timeout=5) as r:
+                return r.status, r.headers.get("Content-Type", ""), \
+                    r.read().decode()
+
+        code, ctype, body = get("/healthz")
+        assert code == 200 and "json" in ctype
+        doc = json.loads(body)
+        assert doc["status"] == "ok" and doc["uptime_s"] >= 0
+        code, _, body = get("/statusz")
+        doc = json.loads(body)
+        assert doc["tenants"] == {"alice": {"budget": 100}}
+        assert "health" in doc
+        _, ctype, body = get("/statusz?format=html")
+        assert "html" in ctype and "<html" in body
+        code, _, body = get("/varz")
+        assert json.loads(body)["oracle.calls"] == 42.0
+        _, _, body = get("/metrics")
+        assert "oracle_calls 42" in body
+        # a failing provider renders as an error section, not a 500
+        hub.add_provider("boom", lambda: 1 / 0)
+        _, _, body = get("/statusz")
+        assert "error" in json.loads(body)["boom"]
+    finally:
+        srv.shutdown()
+
+
+# ------------------------------------------------------- flight recorder
+def test_flight_recorder_dump_parseable(ds, tmp_path):
+    reg = MetricsRegistry()
+    tr = Tracer(metrics=reg)
+    with use_tracer(tr):
+        _run(ds, audit_rate=0.0)[0]
+    fr = FlightRecorder(tmp_path / "debug-bundle", tracer=tr, registry=reg)
+    fr.record_delta()
+    reg.counter("oracle.calls").inc(7)
+    fr.record_delta()
+    d = fr.dump("test-dump")
+    man = json.loads((d / "manifest.json").read_text())
+    assert man["reason"] == "test-dump"
+    assert man["n_spans"] > 0
+    metrics = json.loads((d / "metrics.json").read_text())
+    assert "oracle.calls" in metrics
+    spans = [json.loads(ln)
+             for ln in (d / "spans.jsonl").read_text().splitlines()]
+    assert spans and all("span_id" in s for s in spans)
+    deltas = [json.loads(ln)
+              for ln in (d / "metric_deltas.jsonl").read_text().splitlines()]
+    assert any(dl["delta"].get("oracle.calls") == 7.0 for dl in deltas)
+
+
+def test_flight_recorder_dumps_on_critical_alert(tmp_path):
+    reg = MetricsRegistry()
+    fr = FlightRecorder(tmp_path / "debug-bundle", tracer=None, registry=reg)
+    set_flight_recorder(fr)
+    try:
+        reg.set("service.tenant_budget_used_ratio", 0.99)
+        mon = HealthMonitor(reg, rules=default_rules(), sinks=[
+            fr.note_alert], min_interval_s=0.0)
+        mon.evaluate()
+        man = json.loads(
+            (tmp_path / "debug-bundle" / "manifest.json").read_text())
+        assert man["reason"] == "critical-alert:tenant-budget-burn"
+        assert fr.dumps == 1
+    finally:
+        set_flight_recorder(None)
+        set_monitor(None)
+
+
+# ----------------------------------------------------- exporter hardening
+def test_prometheus_export_help_le_and_info():
+    reg = MetricsRegistry()
+    reg.counter("oracle.calls").inc(3)
+    reg.histogram("round.wall_s").observe(0.5)
+    reg.set_info("run.arch", "qwen1.5-0.5b")
+    reg.gauge("weird.gauge").set("not-a-number")
+    text = registry_to_prometheus(reg)
+    assert "# HELP oracle_calls" in text
+    assert "# HELP round_wall_s" in text
+    # le labels are %g-formatted floats, not repr floats
+    assert 'le="0.5"' in text and 'le="+Inf"' in text
+    assert 'le="0.001"' in text and 'le="0.001000' not in text
+    # a non-numeric gauge degrades to the info idiom instead of crashing
+    assert 'weird_gauge{value="not-a-number"} 1' in text
+    assert 'run_arch{value="qwen1.5-0.5b"} 1' in text
